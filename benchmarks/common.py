@@ -1,0 +1,119 @@
+"""Shared harness for the paper-table benchmarks.
+
+Scenario = (model family, non-IID pattern) analogue of the paper's four
+dataset blocks (§5.1), sized for CPU:
+
+* ``cifar``     — label skew Dir(0.1), CLIP-ViT-like encoder classifier
+* ``domainnet`` — feature skew (domains), CLIP-ViT-like encoder classifier
+* ``xglue``     — feature skew, XLM-R-like text classifier
+
+Each scenario pretrains a reduced model on the balanced identity-domain
+corpus (the offline stand-in for the pretrained checkpoint, DESIGN.md §2)
+and then runs the paper's Algorithm 1 under the requested strategy.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
+from repro.core.server import FLServer, History
+from repro.data.pretrain import pretrain
+from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
+from repro.models.model import Model
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench")
+ROUNDS = int(os.environ.get("BENCH_ROUNDS", "25"))
+N_CLIENTS = int(os.environ.get("BENCH_CLIENTS", "20"))
+COHORT = int(os.environ.get("BENCH_COHORT", "5"))
+
+
+@dataclass
+class Scenario:
+    name: str
+    arch: str
+    skew: str
+    n_layers: int = 4
+    d_model: int = 64
+    lr: float = 0.01
+    lam: float = 1.0
+    local_steps: int = 2
+    batch_size: int = 16
+    pretrain_steps: int = 200
+
+
+SCENARIOS = {
+    "cifar": Scenario("cifar", "clip_vit_b32", "label"),
+    "domainnet": Scenario("domainnet", "clip_vit_b32", "feature"),
+    "xglue": Scenario("xglue", "xlm_roberta_base", "feature"),
+}
+
+
+_cache: dict = {}
+
+
+def build_world(scn: Scenario, seed: int = 0):
+    """(model, pretrained params, data) — cached per (scenario, seed)."""
+    key = (scn.name, seed)
+    if key in _cache:
+        return _cache[key]
+    cfg = reduced(get_arch(scn.arch), n_layers=scn.n_layers,
+                  d_model=scn.d_model)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=32))
+    vlm = cfg.family == "vlm"
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=N_CLIENTS, n_classes=cfg.n_classes or 10,
+        vocab_size=cfg.vocab_size, seq_len=16, samples_per_client=32,
+        skew=scn.skew, objective="classification", signal=0.8,
+        domain_strength=0.4, dirichlet_alpha=0.1, seed=seed,
+        modality="patches" if vlm else "tokens",
+        patch_tokens=cfg.n_prefix_tokens if vlm else 8,
+        patch_dim=cfg.d_model if vlm else 64))
+    params = model.init(jax.random.PRNGKey(seed))
+    params = pretrain(model, params, data, steps=scn.pretrain_steps, lr=3e-3)
+    _cache[key] = (model, params, data)
+    return _cache[key]
+
+
+def run_fl(scn: Scenario, strategy: str, *, budget=1, budgets=None,
+           rounds: int = ROUNDS, seed: int = 0) -> History:
+    model, params, data = build_world(scn, seed)
+    fl = FLConfig(n_clients=N_CLIENTS, cohort_size=COHORT, rounds=rounds,
+                  local_steps=scn.local_steps, lr=scn.lr,
+                  batch_size=scn.batch_size, strategy=strategy,
+                  budget=budget, budgets=budgets, lam=scn.lam, seed=seed)
+    server = FLServer(model, fl, data)
+    _, hist = server.run(params)
+    return hist
+
+
+def half_normal_budgets(n: int, lo: int = 1, hi: int = 4,
+                        seed: int = 0) -> tuple[int, ...]:
+    """R_i ~ truncated half-normal on [lo, hi] (§5.2 heterogeneous)."""
+    rng = np.random.RandomState(seed)
+    vals = np.abs(rng.randn(n)) * (hi - lo) / 2 + lo
+    return tuple(int(v) for v in np.clip(np.round(vals), lo, hi))
+
+
+def save_result(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def timer(fn, *args, reps: int = 3, **kw):
+    fn(*args, **kw)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return (time.perf_counter() - t0) / reps * 1e6   # µs

@@ -1,0 +1,88 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report > experiments/roofline_tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def norm(a: str) -> str:
+    return a.replace("-", "_").replace(".", "_")
+
+
+def load():
+    rows = {}
+    for path in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        key = (norm(r["arch"]), r["shape"], r["mesh"],
+               "opt" if r.get("opts") else "base")
+        prev = rows.get(key)
+        if prev is None or os.path.getmtime(path) > prev[1]:
+            rows[key] = (r, os.path.getmtime(path))
+    return {k: v[0] for k, v in rows.items()}
+
+
+def fmt_table(rows: dict, mesh: str, variant: str) -> str:
+    out = [f"### {'Optimized' if variant == 'opt' else 'Baseline'} — mesh {mesh}",
+           "",
+           "| arch | shape | compute_s | memory_s | collective_s | dominant | useful | temp GB/chip |",
+           "|---|---|---|---|---|---|---|---|"]
+    archs = sorted({k[0] for k in rows})
+    for a in archs:
+        for s in SHAPE_ORDER:
+            r = rows.get((a, s, mesh, variant))
+            if not r:
+                continue
+            t = r["roofline"]
+            out.append(
+                f"| {a} | {s} | {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+                f"| {t['collective_s']:.3e} | {r['dominant']} "
+                f"| {r.get('useful_flops_frac') or 0:.3f} "
+                f"| {r['memory']['temp_bytes'] / 1e9:.1f} |")
+    return "\n".join(out)
+
+
+def fmt_dryrun_summary(rows: dict) -> str:
+    counts = defaultdict(int)
+    for (a, s, mesh, v), r in rows.items():
+        if v == "base":
+            counts[mesh] += 1
+    out = ["### Compile status",
+           ""]
+    for mesh, n in sorted(counts.items()):
+        out.append(f"* mesh {mesh}: {n} (arch × shape) pairs lowered + compiled")
+    out.append("")
+    out.append("| arch | shape | mesh | compile_s | args GB/chip | flops (step) | coll GB (step) |")
+    out.append("|---|---|---|---|---|---|---|")
+    for (a, s, mesh, v) in sorted(rows):
+        if v != "base":
+            continue
+        r = rows[(a, s, mesh, v)]
+        out.append(f"| {a} | {s} | {mesh} | {r['compile_s']:.1f} "
+                   f"| {r['memory']['argument_bytes'] / 1e9:.2f} "
+                   f"| {r['flops']:.2e} | {r['collective_bytes'] / 1e9:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load()
+    print("## §Dry-run\n")
+    print(fmt_dryrun_summary(rows))
+    print("\n## §Roofline\n")
+    for mesh in ("16x16", "2x16x16"):
+        print(fmt_table(rows, mesh, "base"))
+        print()
+    print(fmt_table(rows, "16x16", "opt"))
+
+
+if __name__ == "__main__":
+    main()

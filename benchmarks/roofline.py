@@ -1,0 +1,65 @@
+"""Roofline report — reads the dry-run JSONs (launch/dryrun.py) and renders
+the §Roofline table: three terms per (arch × shape × mesh), dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, and a one-line lever."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+LEVERS = {
+    "compute": "shard the replicated compute (heads/experts) or cut waste "
+               "flops (remat policy, dense-expert fallback)",
+    "memory": "fuse/reshard to cut materialised activations (scores, "
+              "logits); shrink cache reads per step",
+    "collective": "reshard to remove all-gather/all-reduce from the layer "
+                  "loop; overlap or quantize Eq.(5) upload",
+}
+
+
+def load_reports(mesh: str | None = None) -> list[dict]:
+    from benchmarks.report import load
+    rows = load()          # deduped: newest per (arch, shape, mesh, variant)
+    out = [r for (a, s, m, v), r in sorted(rows.items())
+           if (mesh is None or m == mesh)]
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    t = r["roofline"]
+    frac = r.get("useful_flops_frac") or 0.0
+    variant = "+".join(r.get("opts", [])) or "base"
+    return (f"{r['arch']:<22s} {r['shape']:<12s} {r['mesh']:<8s} "
+            f"{variant:<18s} "
+            f"{t['compute_s']:>10.3e} {t['memory_s']:>10.3e} "
+            f"{t['collective_s']:>10.3e}  {r['dominant']:<10s} "
+            f"{frac:>7.3f}")
+
+
+def main(mesh: str | None = "16x16"):
+    reports = load_reports(mesh)
+    if not reports:
+        print(f"(roofline: no dry-run reports found under {DRYRUN_DIR} — "
+              f"run `python -m repro.launch.dryrun --all` first)")
+        return []
+    print("=== Roofline (per step; seconds; TPU v5e constants) ===")
+    print(f"{'arch':<22s} {'shape':<12s} {'mesh':<8s} {'variant':<18s} "
+          f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s}  "
+          f"{'dominant':<10s} {'useful':>7s}")
+    for r in reports:
+        print(fmt_row(r))
+    # levers summary
+    doms = {}
+    for r in reports:
+        doms.setdefault(r["dominant"], []).append(f"{r['arch']}×{r['shape']}")
+    print("\nDominant-term levers:")
+    for d, pairs in doms.items():
+        print(f"  {d} ({len(pairs)} pairs): {LEVERS[d]}")
+    return reports
+
+
+if __name__ == "__main__":
+    main(None)

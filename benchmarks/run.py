@@ -1,0 +1,106 @@
+"""Benchmark entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure plus micro-benchmarks and the roofline
+report.  Prints ``name,us_per_call,derived`` CSV lines for the micro
+section, then the formatted tables.
+
+Env knobs: BENCH_ROUNDS (default 25), BENCH_FAST=1 (8 rounds, micro only
+reps=1).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FAST = os.environ.get("BENCH_FAST") == "1"
+ROUNDS = 8 if FAST else None
+
+
+def micro_benchmarks():
+    """name,us_per_call,derived CSV: kernels + FL primitives."""
+    from benchmarks.common import timer
+    from repro.kernels import ops
+    from repro.core.solver import solve_icm
+
+    print("name,us_per_call,derived")
+
+    # flash attention kernel (interpret) vs jnp reference
+    B, H, K, S, D = 1, 4, 2, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    us = timer(lambda: jax.block_until_ready(
+        ops.flash_attention(q, k, v, interpret=True)), reps=1 if FAST else 3)
+    flops = 4 * B * H * S * S * D
+    print(f"flash_attention_interp_{S}x{D},{us:.1f},{flops/us*1e-3:.2f}GFLOPs")
+
+    # ssd kernel
+    x = jax.random.normal(ks[0], (4, 256, 64))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (4, 256)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (4,)))
+    Bm = jax.random.normal(ks[0], (4, 256, 32))
+    Cm = jax.random.normal(ks[1], (4, 256, 32))
+    Dp = jnp.ones((4,))
+    from repro.kernels.ssd_scan import ssd_scan
+    us = timer(lambda: jax.block_until_ready(
+        ssd_scan(x, dt, A, Bm, Cm, Dp, chunk=64, interpret=True)),
+        reps=1 if FAST else 3)
+    print(f"ssd_scan_interp_bh4_s256,{us:.1f},-")
+
+    # layer grad norms (fused) vs per-leaf jnp
+    g = {"w": jax.random.normal(ks[0], (16, 64, 256)),
+         "b": jax.random.normal(ks[1], (16, 256))}
+    us = timer(lambda: jax.block_until_ready(
+        ops.layer_grad_norms(g, interpret=True)), reps=1 if FAST else 3)
+    print(f"layer_grad_norms_L16,{us:.1f},-")
+
+    # (P1) solver
+    G = np.abs(np.random.RandomState(0).randn(20, 24))
+    t0 = time.perf_counter()
+    for _ in range(10):
+        solve_icm(G, 2, lam=1.0)
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    print(f"p1_solver_icm_n20_L24,{us:.1f},-")
+
+    # one FL round (simulator, reduced model)
+    from benchmarks.common import SCENARIOS, build_world, run_fl
+    t0 = time.perf_counter()
+    run_fl(SCENARIOS["cifar"], "ours", budget=1, rounds=1)
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"fl_round_sim_cifar,{us:.1f},includes_jit")
+    t0 = time.perf_counter()
+    run_fl(SCENARIOS["cifar"], "ours", budget=1, rounds=2)
+    us2 = (time.perf_counter() - t0) / 2 * 1e6
+    print(f"fl_round_sim_cifar_warm,{us2:.1f},-")
+
+
+def main() -> None:
+    micro_benchmarks()
+    print()
+    from benchmarks import (ablation_lambda, fig2, roofline, seeds, table1,
+                            table2, table3)
+    table1.main(rounds=ROUNDS)
+    print()
+    seeds.main(rounds=ROUNDS, seeds=(0,) if FAST else (0, 1, 2))
+    print()
+    table2.main(rounds=ROUNDS)
+    print()
+    table3.main()
+    print()
+    ablation_lambda.main(rounds=ROUNDS)
+    print()
+    fig2.main(rounds=ROUNDS)
+    print()
+    roofline.main(None)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,33 @@
+"""Multi-seed repeat of the headline Table-1 comparison (xglue, R=1).
+
+Single-seed orderings at reduced-model scale are noisy; this repeats the
+ours / rgn / top / full comparison over 3 seeds and reports mean ± std.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCENARIOS, run_fl, save_result
+
+STRATS = ("ours", "rgn", "top", "bottom", "full")
+
+
+def main(rounds=None, seeds=(0, 1, 2)):
+    scn = SCENARIOS["xglue"]
+    table = {s: [] for s in STRATS}
+    for seed in seeds:
+        for s in STRATS:
+            h = run_fl(scn, s, budget=1, seed=seed,
+                       **({} if rounds is None else {"rounds": rounds}))
+            table[s].append(h.summary()["best_acc"])
+    print(f"=== Table 1 (xglue, R=1) over seeds {list(seeds)} ===")
+    for s in STRATS:
+        v = np.array(table[s])
+        print(f"  {s:8s}: {v.mean():.3f} ± {v.std():.3f}   {np.round(v, 3)}")
+    save_result("table1_seeds", {k: list(map(float, v))
+                                 for k, v in table.items()})
+    return table
+
+
+if __name__ == "__main__":
+    main()

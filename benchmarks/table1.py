@@ -1,0 +1,57 @@
+"""Table 1 analogue — identical resources: every client fine-tunes R layers.
+
+Columns: strategies (Top/Bottom/Both/SNR/RGN/Ours + Full benchmark);
+rows: scenario × R ∈ {1, 2}.  Reports best test accuracy over the run.
+"""
+from __future__ import annotations
+
+from benchmarks.common import SCENARIOS, run_fl, save_result
+
+STRATS = ("top", "bottom", "both", "snr", "rgn", "ours")
+
+
+def run(scenarios=("cifar", "domainnet", "xglue"), budgets=(1, 2),
+        rounds=None) -> dict:
+    out = {}
+    for sname in scenarios:
+        scn = SCENARIOS[sname]
+        kw = {} if rounds is None else {"rounds": rounds}
+        full = run_fl(scn, "full", **kw).summary()
+        out[(sname, "full")] = full["best_acc"]
+        for R in budgets:
+            for s in STRATS:
+                if s == "both" and R < 2:
+                    out[(sname, s, R)] = float("nan")
+                    continue
+                h = run_fl(scn, s, budget=R, **kw)
+                out[(sname, s, R)] = h.summary()["best_acc"]
+    return out
+
+
+def fmt(results: dict, budgets=(1, 2)) -> str:
+    lines = ["=== Table 1: identical resources (best test acc) ==="]
+    scenarios = sorted({k[0] for k in results})
+    hdr = f"{'strategy':9s}" + "".join(
+        f" | {s}:R={r}" for s in scenarios for r in budgets)
+    lines.append(hdr)
+    lines.append(f"{'full':9s}" + "".join(
+        f" | {results[(s, 'full')]:.3f}  " for s in scenarios for _ in budgets))
+    for strat in STRATS:
+        row = f"{strat:9s}"
+        for s in scenarios:
+            for r in budgets:
+                v = results.get((s, strat, r), float("nan"))
+                row += f" | {v:.3f}  " if v == v else " |   -    "
+        lines.append(row)
+    return "\n".join(lines)
+
+
+def main(rounds=None):
+    res = run(rounds=rounds)
+    print(fmt(res))
+    save_result("table1", {str(k): v for k, v in res.items()})
+    return res
+
+
+if __name__ == "__main__":
+    main()

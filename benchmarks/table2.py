@@ -1,0 +1,45 @@
+"""Table 2 analogue — heterogeneous resources: R_i ~ half-normal on [1,4]."""
+from __future__ import annotations
+
+from benchmarks.common import (N_CLIENTS, SCENARIOS, half_normal_budgets,
+                               run_fl, save_result)
+
+STRATS = ("top", "bottom", "both", "snr", "rgn", "ours")
+
+
+def run(scenarios=("cifar", "domainnet", "xglue"), rounds=None) -> dict:
+    budgets = half_normal_budgets(N_CLIENTS)
+    out = {"budgets": budgets}
+    kw = {} if rounds is None else {"rounds": rounds}
+    for sname in scenarios:
+        scn = SCENARIOS[sname]
+        out[(sname, "full")] = run_fl(scn, "full", **kw).summary()["best_acc"]
+        for s in STRATS:
+            h = run_fl(scn, s, budgets=budgets, **kw)
+            out[(sname, s)] = h.summary()["best_acc"]
+    return out
+
+
+def fmt(results: dict) -> str:
+    lines = ["=== Table 2: heterogeneous resources R_i∈[1,4] (best acc) ===",
+             f"budgets: {results['budgets']}"]
+    scenarios = sorted({k[0] for k in results if isinstance(k, tuple)})
+    lines.append(f"{'strategy':9s}" + "".join(f" | {s:9s}" for s in scenarios))
+    lines.append(f"{'full':9s}" + "".join(
+        f" | {results[(s, 'full')]:9.3f}" for s in scenarios))
+    for strat in STRATS:
+        lines.append(f"{strat:9s}" + "".join(
+            f" | {results[(s, strat)]:9.3f}" for s in scenarios))
+    return "\n".join(lines)
+
+
+def main(rounds=None):
+    res = run(rounds=rounds)
+    print(fmt(res))
+    save_result("table2", {str(k): (list(v) if isinstance(v, tuple) else v)
+                           for k, v in res.items()})
+    return res
+
+
+if __name__ == "__main__":
+    main()

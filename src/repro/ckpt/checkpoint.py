@@ -1,0 +1,97 @@
+"""Dependency-free pytree checkpointing (orbax is not available offline).
+
+Format: one ``step_<n>/`` directory per checkpoint containing
+
+* ``arrays.npz``  — flattened leaves keyed by escaped tree paths
+* ``manifest.json`` — tree structure, dtypes, FL round metadata
+
+Atomic via write-to-tmp + rename.  Supports partial restore (e.g. restoring
+only the selected-layer substack on resource-constrained clients — the
+paper's clients never hold optimizer state for frozen layers).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return f"[{entry.idx}]"
+    return str(entry)
+
+
+def save_checkpoint(directory: str, step: int, params: PyTree,
+                    extra: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    target = os.path.join(directory, f"step_{step:08d}")
+    flat = _flatten(params)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    tmp = tempfile.mkdtemp(dir=directory)
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k.replace("/", "|"): v for k, v in flat.items()})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(target):
+            shutil.rmtree(target)
+        os.rename(tmp, target)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return target
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template: PyTree,
+                       step: Optional[int] = None) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    step = step if step is not None else latest_step(directory)
+    assert step is not None, f"no checkpoints under {directory}"
+    target = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(target, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(target, "arrays.npz")) as z:
+        flat = {k.replace("|", "/"): z[k] for k in z.files}
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for path, leaf in leaves_with_path:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = flat[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), \
+            f"{key}: ckpt {arr.shape} vs template {leaf.shape}"
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest

@@ -1,0 +1,16 @@
+"""LLaMA-2-7B — the paper's QA-datasets model."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11008,
+    vocab_size=32000,
+    mlp_act="silu",
+    tie_embeddings=False,
+    source="paper §5.1 (Touvron et al., 2023)",
+)

@@ -1,0 +1,7 @@
+"""The paper's contribution: selective layer fine-tuning in FL."""
+from repro.core.masks import (aggregation_weights, chi_divergence,  # noqa: F401
+                              mask_from_indices, per_layer_sq_norms, union_mask)
+from repro.core.solver import solve_icm, solve_unified, objective  # noqa: F401
+from repro.core.strategies import ALL_STRATEGIES, ProbeReport, select  # noqa: F401
+from repro.core.server import FLServer, History  # noqa: F401
+from repro.core.client import Client  # noqa: F401

@@ -1,0 +1,62 @@
+"""Federated aggregation, Eq. (5)-(7).
+
+Given the cohort's accumulated updates Δ_i^t (Eq. 4), the mask matrix and
+sample sizes, form the global update
+
+    Δ^t = Σ_{l∈L_t} Σ_{i∈S_t} w_{i,l}^t Δ_{i,l}^t ,
+    θ^{t+1} = θ^t − η Δ^t .
+
+The per-layer weights w_{i,l} (Eq. 7) renormalise over exactly the clients
+that selected layer l.  This module is the *simulator* path (explicit
+per-client pytrees); the distributed path fuses the same weighting into a
+single backward pass via gradient scaling (sharding/fl_step.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import aggregation_weights
+from repro.models.model import layer_layout, split_mask
+
+Array = jax.Array
+PyTree = Any
+
+
+def scale_by_layer(tree: PyTree, scale_vec: Array, cfg) -> PyTree:
+    """Multiply each selectable layer's subtree by its entry of scale_vec (L,).
+
+    Frozen groups (embed/head/norms) are zeroed — they carry no update.
+    """
+    parts = split_mask(scale_vec, cfg)
+    out = {}
+    for key, sub in tree.items():
+        if key in parts:
+            s = parts[key]
+            if key == "shared_attn":
+                out[key] = jax.tree.map(lambda x: x * s[0].astype(x.dtype), sub)
+            else:
+                out[key] = jax.tree.map(
+                    lambda x: x * s.astype(x.dtype).reshape(
+                        (s.shape[0],) + (1,) * (x.ndim - 1)), sub)
+        else:
+            out[key] = jax.tree.map(jnp.zeros_like, sub)
+    return out
+
+
+def aggregate(deltas: Sequence[PyTree], mask_matrix: Array, sizes: Array,
+              cfg) -> PyTree:
+    """Eq. (5): Δ^t = Σ_l Σ_i w_{i,l} Δ_{i,l}."""
+    W = aggregation_weights(mask_matrix, sizes)          # (n, L)
+    total = None
+    for i, d in enumerate(deltas):
+        scaled = scale_by_layer(d, W[i], cfg)
+        total = scaled if total is None else jax.tree.map(jnp.add, total, scaled)
+    return total
+
+
+def apply_update(params: PyTree, update: PyTree, lr: float) -> PyTree:
+    """Eq. (6): θ^{t+1} = θ^t − η Δ^t."""
+    return jax.tree.map(lambda p, u: (p - lr * u.astype(p.dtype)), params, update)

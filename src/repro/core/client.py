@@ -1,0 +1,81 @@
+"""Client-side local training (Eq. 2-4) and the selection-probe step (§4.2).
+
+Everything is jit-compiled once per architecture and reused across rounds
+and clients — masks, batches and learning rate are runtime arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as M
+from repro.models.model import Model, apply_layer_mask
+
+Array = jax.Array
+PyTree = Any
+
+
+class Client:
+    """Stateless executor for local training; data is passed per call."""
+
+    def __init__(self, model: Model):
+        self.model = model
+        self.cfg = model.cfg
+        self._local_update = jax.jit(self._local_update_impl)
+        self._probe = jax.jit(self._probe_impl)
+        self._eval = jax.jit(self._eval_impl)
+
+    # -- Eq. (3)-(4): τ masked SGD steps, return accumulated update ---------
+    def _local_update_impl(self, params: PyTree, batches: PyTree,
+                           mask: Array, lr: Array):
+        model, cfg = self.model, self.cfg
+
+        def step(p, batch):
+            loss, g = jax.value_and_grad(model.loss)(p, batch)
+            g = apply_layer_mask(g, mask, cfg)
+            new_p = jax.tree.map(lambda a, b: a - lr * b.astype(a.dtype), p, g)
+            return new_p, loss
+
+        p_final, losses = jax.lax.scan(step, params, batches)
+        # Δ_i^t = (θ^{t,0} − θ^{t,τ}) / η  = Σ_k Σ_{l∈L_i} g_{i,l}
+        delta = jax.tree.map(lambda a, b: (a - b).astype(jnp.float32) / lr,
+                             params, p_final)
+        return delta, jnp.mean(losses)
+
+    def local_update(self, params, batches, mask, lr) -> tuple[PyTree, float]:
+        """batches: pytree stacked on axis 0 with length τ."""
+        delta, loss = self._local_update(params, batches,
+                                         jnp.asarray(mask, jnp.float32),
+                                         jnp.asarray(lr, jnp.float32))
+        return delta, float(loss)
+
+    # -- selection probe: layer-wise gradient stats on one batch ------------
+    def _probe_impl(self, params: PyTree, batch: PyTree):
+        g = jax.grad(self.model.loss)(params, batch)
+        sq, mean, var = M.per_layer_stats(g, self.cfg)
+        p_sq = M.per_layer_param_sq_norms(params, self.cfg)
+        return sq, mean, var, p_sq
+
+    def probe(self, params, batch) -> dict[str, np.ndarray]:
+        sq, mean, var, p_sq = self._probe(params, batch)
+        return {"grad_sq_norms": np.asarray(sq), "grad_means": np.asarray(mean),
+                "grad_vars": np.asarray(var), "param_sq_norms": np.asarray(p_sq)}
+
+    # -- evaluation -----------------------------------------------------------
+    def _eval_impl(self, params: PyTree, batch: PyTree):
+        loss = self.model.loss(params, batch)
+        acc = jnp.zeros(())
+        if "label" in batch:
+            cfg = self.model.cfg
+            h, _, _ = self.model.forward_seq(params, batch)
+            logits = self.model._head(params, jnp.mean(h, axis=1)[:, None])[:, 0]
+            acc = jnp.mean((jnp.argmax(logits, -1) == batch["label"]).astype(jnp.float32))
+        return loss, acc
+
+    def evaluate(self, params, batch) -> tuple[float, float]:
+        loss, acc = self._eval(params, batch)
+        return float(loss), float(acc)

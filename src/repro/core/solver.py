@@ -1,0 +1,108 @@
+"""Solver for the paper's layer-selection problem (P1), §4.2.
+
+    max_{m_i}  Σ_{i∈S_t} Σ_{l∈L_i^t} ‖g_{i,l}(θ^t; ξ_i^t)‖²
+               − (λ/2) Σ_{i∈S_t} Σ_{j≠i} ‖m_i^t − m_j^t‖₁
+    s.t.       R(m_i^t) ≤ R_i^t  ∀ i∈S_t
+
+This is a small integer program over (|S_t| × L) binary variables that the
+*server* solves each selection round (inputs are the L-vectors of gradient
+norms the clients upload — L floats per client, §4.2).
+
+Note: the paper's (P1) display renders the penalty with a squared ℓ1 norm
+while the accompanying text introduces it as the plain ℓ1 regulariser
+"Σ_{j≠i}‖m_i − m_j‖₁".  We implement the ℓ1 form (default), which makes the
+objective layer-separable given the other clients' masks, plus the squared
+variant for ablation.
+
+Solvers:
+
+* :func:`solve_icm` — iterated conditional modes (block coordinate ascent):
+  per client, the conditional objective is separable per layer, so the
+  conditional argmax under a knapsack budget is a greedy top-k by utility
+  density.  Monotone in the objective ⇒ converges to a fixed point.
+* :func:`solve_unified` — the λ→∞ limit: one global ranking by
+  Σ_i ‖g_{i,l}‖², each client takes its top-R_i prefix (all clients agree
+  on ordering ⇒ maximal overlap, χ divergence minimised for equal budgets).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _pick_topk_budget(util: np.ndarray, costs: np.ndarray, budget: float) -> np.ndarray:
+    """Greedy knapsack: pick layers by utility density until budget exhausted."""
+    m = np.zeros(util.shape[0], dtype=np.float32)
+    density = util / np.maximum(costs, 1e-12)
+    order = np.argsort(-density)
+    spent = 0.0
+    for l in order:
+        if util[l] <= 0 and spent > 0:
+            break   # never select negative-utility layers beyond the first
+        if spent + costs[l] <= budget + 1e-9:
+            m[l] = 1.0
+            spent += costs[l]
+    if m.sum() == 0:   # budget must admit at least the cheapest layer
+        m[np.argmin(costs)] = 1.0
+    return m
+
+
+def objective(G: np.ndarray, masks: np.ndarray, lam: float,
+              penalty: str = "l1") -> float:
+    """The (P1) objective value for a candidate mask matrix."""
+    gain = float(np.sum(G * masks))
+    diff = np.abs(masks[:, None, :] - masks[None, :, :]).sum(-1)   # (n,n) ℓ1
+    if penalty == "l1_sq":
+        diff = diff ** 2
+    pen = 0.5 * lam * (diff.sum() - np.trace(diff))
+    return gain - pen
+
+
+def solve_icm(G: np.ndarray, budgets, lam: float, *,
+              costs: np.ndarray | None = None, penalty: str = "l1",
+              max_iters: int = 50, init: np.ndarray | None = None):
+    """Block coordinate ascent on (P1).
+
+    G: (n, L) per-client per-layer squared gradient norms.
+    budgets: scalar or (n,) — R_i, in units of ``costs`` (default: #layers).
+    Returns (masks (n,L) float32, objective value, n_iters).
+    """
+    n, L = G.shape
+    budgets = np.broadcast_to(np.asarray(budgets, np.float64), (n,))
+    costs = np.ones(L) if costs is None else np.asarray(costs, np.float64)
+    masks = init.copy().astype(np.float32) if init is not None else \
+        np.stack([_pick_topk_budget(G[i], costs, budgets[i]) for i in range(n)])
+
+    for it in range(max_iters):
+        changed = False
+        for i in range(n):
+            others = masks.sum(0) - masks[i]                  # Σ_{j≠i} m_j(l)
+            if penalty == "l1":
+                # ∂pen/∂m_i(l) = λ Σ_{j≠i} (1 − 2 m_j(l))
+                util = G[i] - lam * ((n - 1) - 2.0 * others)
+            else:  # l1_sq: linearise around current disagreement (heuristic)
+                disagree = np.abs(masks[i][None, :] - masks).sum(-1)  # (n,)
+                util = G[i] - lam * ((n - 1) - 2.0 * others) * (1.0 + disagree.mean())
+            new = _pick_topk_budget(util, costs, budgets[i])
+            if not np.array_equal(new, masks[i]):
+                masks[i] = new
+                changed = True
+        if not changed:
+            return masks, objective(G, masks, lam, penalty), it + 1
+    return masks, objective(G, masks, lam, penalty), max_iters
+
+
+def solve_unified(G: np.ndarray, budgets, *, costs: np.ndarray | None = None):
+    """λ→∞: shared ranking by aggregate gradient norm; per-client prefix."""
+    n, L = G.shape
+    budgets = np.broadcast_to(np.asarray(budgets, np.float64), (n,))
+    costs = np.ones(L) if costs is None else np.asarray(costs, np.float64)
+    total = G.sum(0)
+    order = np.argsort(-total / np.maximum(costs, 1e-12))
+    masks = np.zeros((n, L), np.float32)
+    for i in range(n):
+        spent = 0.0
+        for l in order:
+            if spent + costs[l] <= budgets[i] + 1e-9:
+                masks[i, l] = 1.0
+                spent += costs[l]
+    return masks

@@ -1,0 +1,97 @@
+"""Layer-selection strategies (§5.1): the paper's method and all baselines.
+
+Every strategy maps a :class:`ProbeReport` (what clients upload at the start
+of a selection round) + per-client budgets → a (cohort, L) mask matrix.
+
+* ``top``    — last R layers (near the output) [Kovaleva+19, Lee+19b]
+* ``bottom`` — first R layers (near the input) [Lee+22]
+* ``both``   — R/2 top + R/2 bottom [Xiao+23] (undefined for R=1, as in Table 1)
+* ``snr``    — highest |mean(g)| / var(g) per layer [Mahsereci+17]
+* ``rgn``    — highest ‖g_l‖ / ‖θ_l‖ (relative gradient norm) [Lee+22]
+* ``full``   — all layers (the paper's performance benchmark)
+* ``ours``   — solve (P1) with local gradient norms + λ consistency
+  regulariser (solve_icm), the paper's proposed strategy
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.solver import solve_icm, solve_unified
+
+
+@dataclass
+class ProbeReport:
+    """Per-cohort probe statistics (rows = cohort clients, cols = layers)."""
+    grad_sq_norms: np.ndarray                 # (n, L): ‖g_{i,l}‖²
+    param_sq_norms: Optional[np.ndarray] = None   # (n, L): ‖θ_l‖² (RGN)
+    grad_means: Optional[np.ndarray] = None       # (n, L): mean(g_l)  (SNR)
+    grad_vars: Optional[np.ndarray] = None        # (n, L): var(g_l)   (SNR)
+
+    @property
+    def n(self) -> int:
+        return self.grad_sq_norms.shape[0]
+
+    @property
+    def L(self) -> int:
+        return self.grad_sq_norms.shape[1]
+
+
+def _positional(n: int, L: int, budgets, mode: str) -> np.ndarray:
+    budgets = np.broadcast_to(np.asarray(budgets, int), (n,))
+    masks = np.zeros((n, L), np.float32)
+    for i in range(n):
+        R = min(int(budgets[i]), L)
+        if mode == "top":
+            masks[i, L - R:] = 1.0
+        elif mode == "bottom":
+            masks[i, :R] = 1.0
+        elif mode == "both":
+            lo = R // 2
+            hi = R - lo
+            if lo:
+                masks[i, :lo] = 1.0
+            masks[i, L - hi:] = 1.0
+        else:
+            raise ValueError(mode)
+    return masks
+
+
+def _score_topk(scores: np.ndarray, budgets) -> np.ndarray:
+    n, L = scores.shape
+    budgets = np.broadcast_to(np.asarray(budgets, int), (n,))
+    masks = np.zeros((n, L), np.float32)
+    for i in range(n):
+        R = min(int(budgets[i]), L)
+        masks[i, np.argsort(-scores[i])[:R]] = 1.0
+    return masks
+
+
+def select(strategy: str, probe: ProbeReport, budgets, *,
+           lam: float = 10.0, costs: Optional[np.ndarray] = None,
+           eps: float = 1e-12) -> np.ndarray:
+    """Return the (cohort, L) mask matrix for the given strategy."""
+    n, L = probe.n, probe.L
+    if strategy == "full":
+        return np.ones((n, L), np.float32)
+    if strategy in ("top", "bottom", "both"):
+        return _positional(n, L, budgets, strategy)
+    if strategy == "snr":
+        assert probe.grad_means is not None and probe.grad_vars is not None
+        snr = np.abs(probe.grad_means) / (probe.grad_vars + eps)
+        return _score_topk(snr, budgets)
+    if strategy == "rgn":
+        assert probe.param_sq_norms is not None
+        rgn = np.sqrt(probe.grad_sq_norms) / (np.sqrt(probe.param_sq_norms) + eps)
+        return _score_topk(rgn, budgets)
+    if strategy == "ours":
+        masks, _, _ = solve_icm(probe.grad_sq_norms, budgets, lam, costs=costs)
+        return masks
+    if strategy == "ours_unified":      # λ→∞ fast path (production default)
+        return solve_unified(probe.grad_sq_norms, budgets, costs=costs)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+ALL_STRATEGIES = ("top", "bottom", "both", "snr", "rgn", "ours", "full")

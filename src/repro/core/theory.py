@@ -1,0 +1,120 @@
+"""Estimators for the convergence-theory quantities of §4.1.
+
+* ``E_t1 = ‖Σ_{l∉L_t} ∇_l f(θ^t)‖²``  — importance of the *unselected* layers
+  (Lemma 4.6, first term).
+* ``E_t2 = Σ_{l∈L_t} χ²_{w_{t,l}‖α} κ_l²`` — heterogeneous-selection term.
+* ``κ_l`` — per-layer gradient diversity (Assumption 4.3), estimated as the
+  max over clients of ‖∇_l f(θ) − ∇_l f_i(θ)‖.
+* ``σ_l`` — stochastic-gradient deviation (Assumption 4.2), estimated from
+  repeated minibatch draws.
+* :func:`theorem_4_7_rhs` — evaluates the error-floor expression so tests
+  and experiments can check the *qualitative* claim: the floor grows with
+  E_t1 + E_t2, vanishes under full selection + uniform cohort.
+
+These run on the single-host simulator (small models); they require
+per-client full-batch gradients which would be impractical at pod scale —
+exactly why the paper's strategy estimates them with minibatch norms.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as M
+from repro.core.masks import aggregation_weights, chi_divergence, union_mask
+from repro.models.model import Model
+
+Array = jax.Array
+PyTree = Any
+
+
+def global_gradient(model: Model, params: PyTree, client_batches: Sequence,
+                    alpha: np.ndarray) -> PyTree:
+    """∇f(θ) = Σ_i α_i ∇f_i(θ) (full-batch per client)."""
+    total = None
+    g_fn = jax.jit(jax.grad(model.loss))
+    for a, batch in zip(alpha, client_batches):
+        g = g_fn(params, batch)
+        g = jax.tree.map(lambda x: a * x.astype(jnp.float32), g)
+        total = g if total is None else jax.tree.map(jnp.add, total, g)
+    return total
+
+
+def per_client_gradients(model: Model, params: PyTree,
+                         client_batches: Sequence) -> list[PyTree]:
+    g_fn = jax.jit(jax.grad(model.loss))
+    return [g_fn(params, b) for b in client_batches]
+
+
+def e_t1(model: Model, global_grad: PyTree, union: np.ndarray) -> float:
+    """‖Σ_{l∉L_t} ∇_l f‖² — computed from per-layer squared norms.
+
+    Layer subtrees are disjoint parameter blocks, so the squared norm of the
+    concatenation equals the sum of per-layer squared norms.
+    """
+    sq = np.asarray(M.per_layer_sq_norms(global_grad, model.cfg))
+    return float(np.sum(sq * (1.0 - union)))
+
+
+def kappa_per_layer(model: Model, global_grad: PyTree,
+                    client_grads: Sequence[PyTree]) -> np.ndarray:
+    """κ_l ≥ max_i ‖∇_l f − ∇_l f_i‖ (Assumption 4.3 tight estimate)."""
+    worst = None
+    for g_i in client_grads:
+        diff = jax.tree.map(lambda a, b: a - b.astype(jnp.float32),
+                            global_grad, g_i)
+        sq = np.asarray(M.per_layer_sq_norms(diff, model.cfg))
+        worst = sq if worst is None else np.maximum(worst, sq)
+    return np.sqrt(worst)
+
+
+def e_t2(mask_matrix: np.ndarray, sizes: np.ndarray, kappa: np.ndarray,
+         population_alpha: np.ndarray | None = None,
+         cohort_idx: np.ndarray | None = None) -> float:
+    """Σ_{l∈L_t} χ²_{w_l‖α} κ_l² (Lemma 4.6 second term).
+
+    If ``population_alpha``/``cohort_idx`` are given, weights are embedded
+    into the full population (non-sampled clients have w=0) as in the
+    paper's analysis; otherwise α is taken over the cohort.
+    """
+    W_cohort = np.asarray(aggregation_weights(mask_matrix, sizes))
+    union = union_mask(mask_matrix)
+    if population_alpha is not None:
+        N = population_alpha.shape[0]
+        W = np.zeros((N, mask_matrix.shape[1]), np.float32)
+        W[cohort_idx] = W_cohort
+        alpha = population_alpha
+    else:
+        W = W_cohort
+        alpha = sizes / sizes.sum()
+    chi = np.asarray(chi_divergence(jnp.asarray(W), jnp.asarray(alpha)))
+    return float(np.sum(chi * (kappa ** 2) * union))
+
+
+def theorem_4_7_rhs(f0: float, f_star: float, *, eta: float, gamma: float,
+                    T: int, sigma_sq: float, e1_sum: float, e2_sum: float) -> float:
+    """RHS of Eq. (15) (τ=1). Requires C = 1 − γη > 0."""
+    C = 1.0 - gamma * eta
+    assert C > 0, "learning rate too large for the bound"
+    term_opt = 2.0 / (eta * C * T) * (f0 - f_star)
+    term_noise = 2.0 * gamma * eta / C * sigma_sq
+    term_bias = (1.0 / (gamma * eta * C) + 2.0) * (e1_sum + e2_sum) / T
+    return term_opt + term_noise + term_bias
+
+
+def sigma_per_layer(model: Model, params: PyTree, batches: Sequence,
+                    full_batch) -> np.ndarray:
+    """σ_l estimate: max over minibatches of ‖g_l(ξ) − ∇_l f‖."""
+    g_fn = jax.jit(jax.grad(model.loss))
+    g_full = g_fn(params, full_batch)
+    worst = None
+    for b in batches:
+        g = g_fn(params, b)
+        diff = jax.tree.map(lambda a, c: a.astype(jnp.float32) - c.astype(jnp.float32),
+                            g, g_full)
+        sq = np.asarray(M.per_layer_sq_norms(diff, model.cfg))
+        worst = sq if worst is None else np.maximum(worst, sq)
+    return np.sqrt(worst)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData  # noqa: F401
+from repro.data.pretrain import pretrain  # noqa: F401

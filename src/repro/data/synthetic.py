@@ -1,0 +1,178 @@
+"""Synthetic federated datasets with the paper's two non-IID patterns (§5.1).
+
+The paper's datasets (CIFAR-10 / DomainNet / XGLUE-NC / QA) are not available
+offline; we synthesise tasks with the same *heterogeneity structure*:
+
+* **Label skew** (CIFAR-10 analogue): class proportions per client drawn from
+  Dirichlet(α) (paper uses α=0.1); inputs are class-conditional token
+  sequences — each class has its own token distribution, so the task is
+  learnable and layer importance differs across classes.
+* **Feature skew** (DomainNet/XGLUE analogue): each client belongs to one
+  *domain*; a domain applies a fixed token permutation ("style") to the
+  class-conditional sequences — P(x|y) shifts across clients while labels
+  stay balanced.
+
+Both variants support classification (pooled head) and LM (next-token)
+objectives.  Sampling is numpy-based and deterministic per (seed, client).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class FederatedTaskConfig:
+    n_clients: int = 100
+    n_classes: int = 10
+    vocab_size: int = 512
+    seq_len: int = 32
+    samples_per_client: int = 64
+    skew: str = "label"              # label | feature
+    dirichlet_alpha: float = 0.1
+    n_domains: int = 5
+    objective: str = "classification"  # classification | lm
+    test_samples: int = 256
+    seed: int = 0
+    # class signal strength: fraction of positions carrying class-token signal
+    signal: float = 0.5
+    # feature skew severity: fraction of the vocabulary each domain permutes
+    # (DomainNet-style shift: features partially transfer across domains)
+    domain_strength: float = 0.3
+    # modality: "tokens" (text) or "patches" (vision — CLIP-style stubbed
+    # patch embeddings: class prototypes + per-domain linear style shift)
+    modality: str = "tokens"
+    patch_tokens: int = 8
+    patch_dim: int = 64
+
+
+class SyntheticFederatedData:
+    """Generator for per-client batches and a held-out global test set."""
+
+    def __init__(self, cfg: FederatedTaskConfig):
+        self.cfg = cfg
+        rng = np.random.RandomState(cfg.seed)
+        C, V = cfg.n_classes, cfg.vocab_size
+
+        # class-conditional token distributions: each class prefers a band of tokens
+        logits = rng.randn(C, V) * 0.5
+        for c in range(C):
+            band = np.arange(V) % C == c
+            logits[c, band] += 3.0
+        self.class_probs = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+
+        # domains: partial token permutations (feature shift preserving labels;
+        # only `domain_strength` of the vocab is scrambled, so pretrained
+        # features partially transfer — DomainNet-style)
+        self.domain_perm = []
+        for _ in range(cfg.n_domains):
+            perm = np.arange(V)
+            k = min(int(V * cfg.domain_strength), V)
+            if k > 1:
+                subset = rng.choice(V, size=k, replace=False)
+                perm[subset] = perm[rng.permutation(subset)]
+            self.domain_perm.append(perm)
+        self.domain_perm.append(np.arange(V))   # identity (pretraining corpus)
+
+        # client -> label distribution & domain
+        if cfg.skew == "label":
+            self.client_label_p = rng.dirichlet(
+                np.full(C, cfg.dirichlet_alpha), size=cfg.n_clients)
+            self.client_domain = np.zeros(cfg.n_clients, int)
+        else:
+            self.client_label_p = np.full((cfg.n_clients, C), 1.0 / C)
+            self.client_domain = rng.randint(0, cfg.n_domains, cfg.n_clients)
+
+        # heterogeneous dataset sizes d_i (log-normal, as in real FL)
+        self.sizes = np.maximum(
+            (cfg.samples_per_client *
+             np.exp(rng.randn(cfg.n_clients) * 0.3)).astype(int), 8)
+
+        self._rngs = [np.random.RandomState(cfg.seed * 1000 + 7 * i + 1)
+                      for i in range(cfg.n_clients)]
+        self._test_rng = np.random.RandomState(cfg.seed + 999)
+
+        if cfg.modality == "patches":
+            # class prototypes in patch-embedding space + per-domain style
+            # maps (identity-leaning linear shifts; last = pure identity).
+            # Only `signal` of the patch positions carry class evidence and
+            # the prototypes are weak relative to noise, so accuracy does
+            # not saturate (strategies must actually adapt features).
+            self.proto = rng.randn(C, cfg.patch_tokens, cfg.patch_dim) * 0.5
+            self.patch_signal = rng.rand(cfg.patch_tokens) < cfg.signal
+            self.proto[:, ~self.patch_signal] = 0.0
+            self.domain_map = []
+            for _ in range(cfg.n_domains):
+                M = np.eye(cfg.patch_dim) + \
+                    cfg.domain_strength * rng.randn(cfg.patch_dim, cfg.patch_dim) \
+                    / np.sqrt(cfg.patch_dim)
+                self.domain_map.append(M)
+            self.domain_map.append(np.eye(cfg.patch_dim))
+
+    # ------------------------------------------------------------------
+    @property
+    def alpha(self) -> np.ndarray:
+        """Relative sample sizes α_i = d_i / Σ d_j (Eq. 1)."""
+        return self.sizes / self.sizes.sum()
+
+    def _sample(self, rng: np.random.RandomState, label_p: np.ndarray,
+                domain: int, n: int) -> dict:
+        cfg = self.cfg
+        y = rng.choice(cfg.n_classes, size=n, p=label_p)
+        if cfg.modality == "patches":
+            # patches = domain_style(prototype + noise); identity domain used
+            # for pretraining (index -1)
+            base = self.proto[y] + rng.randn(n, cfg.patch_tokens,
+                                             cfg.patch_dim) * 1.5
+            M = self.domain_map[domain if domain < len(self.domain_map)
+                                else -1]
+            patches = base @ M.T
+            batch = {"patches": patches.astype(np.float32)}
+            if cfg.objective == "classification":
+                batch["label"] = y.astype(np.int32)
+            return batch
+        toks = np.empty((n, cfg.seq_len), np.int32)
+        for k in range(n):
+            sig = rng.rand(cfg.seq_len) < cfg.signal
+            cls_toks = rng.choice(cfg.vocab_size, size=cfg.seq_len,
+                                  p=self.class_probs[y[k]])
+            noise = rng.randint(0, cfg.vocab_size, cfg.seq_len)
+            toks[k] = np.where(sig, cls_toks, noise)
+        perm = self.domain_perm[domain]
+        toks = perm[toks]
+        batch = {"tokens": toks}
+        if cfg.objective == "classification":
+            batch["label"] = y.astype(np.int32)
+        return batch
+
+    def client_batch(self, i: int, batch_size: int) -> dict:
+        """One minibatch from client i's distribution."""
+        return self._sample(self._rngs[i], self.client_label_p[i],
+                            self.client_domain[i], batch_size)
+
+    def client_batches(self, i: int, batch_size: int, n: int) -> dict:
+        """``n`` stacked minibatches (leading axis = τ) for lax.scan."""
+        bs = [self.client_batch(i, batch_size) for _ in range(n)]
+        return {k: np.stack([b[k] for b in bs]) for k in bs[0]}
+
+    def pretrain_batch(self, batch_size: int) -> dict:
+        """Balanced, identity-domain samples — the 'pretraining corpus'."""
+        cfg = self.cfg
+        label_p = np.full(cfg.n_classes, 1.0 / cfg.n_classes)
+        identity = len(self.domain_perm) - 1
+        return self._sample(self._test_rng, label_p, identity, batch_size)
+
+    def test_batch(self, batch_size: Optional[int] = None) -> dict:
+        """Held-out batch from the *global* mixture Σ_i α_i P_i."""
+        cfg = self.cfg
+        n = batch_size or cfg.test_samples
+        rng = self._test_rng
+        # mixture over clients weighted by alpha
+        owners = rng.choice(cfg.n_clients, size=n, p=self.alpha)
+        outs = []
+        for i in owners:
+            outs.append(self._sample(rng, self.client_label_p[i],
+                                     self.client_domain[i], 1))
+        return {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}

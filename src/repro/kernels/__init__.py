@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), with jit'd wrappers in
+ops.py and pure-jnp oracles in ref.py.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,130 @@
+"""Blocked (flash) attention forward — Pallas TPU kernel.
+
+TPU adaptation of the standard streaming-softmax attention: the grid's last
+axis walks key blocks *sequentially* (TPU grids execute the trailing axis
+in order on a core), carrying the running max / normaliser / accumulator in
+VMEM scratch, so the (S×S) score matrix never exists in HBM.  Block shapes
+are MXU-aligned (multiples of 128 on the contracting dims by default).
+
+Supports causal masking, sliding windows and GQA (kv heads < q heads, the
+kv block index map folds the head-group mapping).
+
+Layout: q (B, H, S, D), k/v (B, K, S, D)  →  out (B, H, S, D).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, n_k_blocks: int):
+    qi = pl.program_id(1)          # query-block index
+    ki = pl.program_id(2)          # key-block index (sequential)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Skip key blocks that are fully masked for this query block.  A block
+    # contains a visible (q,k) pair iff k_min <= q_max (causal) and
+    # q_min - k_max < window (sliding window).
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window:
+        needed = jnp.logical_and(
+            needed, q_start - (k_start + block_k - 1) < window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (block_q, D)
+        k = k_ref[0].astype(jnp.float32)          # (block_k, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window:
+            ok &= (q_pos - k_pos) < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]                        # (block_q, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        # fully-masked rows keep m == NEG_INF; exp(NEG_INF - NEG_INF) would
+        # be 1, so explicitly zero masked entries.
+        p = jnp.where(ok, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p.astype(v.dtype), v)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        denom = jnp.where(l_scr[...] > 0, l_scr[...], 1.0)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B,H,S,D), k/v: (B,K,S,D) with H % K == 0. Returns (B,H,S,D)."""
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    assert H % K == 0, (H, K)
+    group = H // K
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    nq, nk = S // block_q, S // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    grid = (B * H, nq, nk)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b, h = bh // H, bh % H
+        return (b * K + h // group, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), q_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running normaliser l
+            pltpu.VMEM((block_q, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q.reshape(B * H, S, D), k.reshape(B * K, S, D), v.reshape(B * K, S, D))
+    return out.reshape(B, H, S, D)

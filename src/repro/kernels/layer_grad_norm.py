@@ -1,0 +1,58 @@
+"""Fused per-layer squared gradient norm — Pallas TPU kernel.
+
+The paper's selection step (§4.2) needs ‖g_{i,l}‖² for every selectable
+layer l, every selection round.  On the stacked-(L, …) gradient layout this
+is a row-wise reduction over possibly hundreds of MB; doing it leaf-by-leaf
+launches L×leaves reductions and re-reads HBM.  This kernel streams each
+stacked leaf once: grid = (L, n_feature_blocks), feature axis sequential,
+accumulating into an f32 (1,1) VMEM scratch, writing the row result on the
+last block.
+
+The wrapper (ops.layer_grad_norms) flattens each stacked leaf to (L, F),
+pads F to the block size, and sums results across leaves.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sqnorm_kernel(g_ref, out_ref, acc_scr, *, n_blocks: int):
+    bi = pl.program_id(1)
+
+    @pl.when(bi == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    g = g_ref[...].astype(jnp.float32)
+    acc_scr[0, 0] += jnp.sum(g * g)
+
+    @pl.when(bi == n_blocks - 1)
+    def _fin():
+        out_ref[0] = acc_scr[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def layer_sq_norms_2d(g: jax.Array, *, block: int = 4096,
+                      interpret: bool = False) -> jax.Array:
+    """Row-wise squared norms of a (L, F) array (F padded to block size)."""
+    L, F = g.shape
+    block = min(block, F)
+    pad = (-F) % block
+    if pad:
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+        F += pad
+    nb = F // block
+    return pl.pallas_call(
+        functools.partial(_sqnorm_kernel, n_blocks=nb),
+        grid=(L, nb),
+        in_specs=[pl.BlockSpec((1, block), lambda l, b: (l, b))],
+        out_specs=pl.BlockSpec((1,), lambda l, b: (l,)),
+        out_shape=jax.ShapeDtypeStruct((L,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(g)

@@ -1,0 +1,65 @@
+"""Fused masked-SGD parameter update — Pallas TPU kernel.
+
+Eq. (3)/(6): θ_l ← θ_l − η · m(l) · g_l applied to the stacked-(L, …)
+layout.  Fusing the (L,) mask broadcast with the AXPY means one HBM
+read-modify-write per parameter instead of materialising the masked
+gradient; the mask scalar for the row is prefetched into SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _masked_update_kernel(mask_ref, lr_ref, p_ref, g_ref, out_ref):
+    m = mask_ref[0]          # scalar mask for this layer row (SMEM)
+    lr = lr_ref[0]
+    p = p_ref[...]
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[...] = (p.astype(jnp.float32) - lr * m * g).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def masked_sgd_update_2d(p: jax.Array, g: jax.Array, mask: jax.Array,
+                         lr, *, block: int = 4096,
+                         interpret: bool = False) -> jax.Array:
+    """p, g: (L, F); mask: (L,); lr scalar. Returns updated (L, F)."""
+    L, F = p.shape
+    block = min(block, F)
+    pad = (-F) % block
+    if pad:
+        p = jnp.pad(p, ((0, 0), (0, pad)))
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+    nb = (F + pad) // block
+    lr_arr = jnp.asarray([lr], jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(L, nb),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda l, b, *_: (l, b)),
+            pl.BlockSpec((1, block), lambda l, b, *_: (l, b)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda l, b, *_: (l, b)),
+    )
+
+    def kernel(mask_s, lr_s, p_ref, g_ref, out_ref):
+        l = pl.program_id(0)
+        m = mask_s[l]
+        lr_ = lr_s[0]
+        out_ref[...] = (p_ref[...].astype(jnp.float32)
+                        - lr_ * m * g_ref[...].astype(jnp.float32)
+                        ).astype(out_ref.dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        interpret=interpret,
+    )(mask, lr_arr, p, g)
+    return out[:, :F] if pad else out

@@ -1,0 +1,99 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+These adapt model-level pytrees / shapes to the kernels' flat layouts and
+fall back to interpret mode off-TPU (``interpret=None`` ⇒ auto-detect).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import layer_grad_norm as _lgn
+from repro.kernels import masked_update as _mu
+from repro.kernels import ssd_scan as _ssd
+
+PyTree = Any
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention (model layout: q/k/v (B, S, H, D))
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """Model-layout wrapper: q (B,S,H,D), k/v (B,S,K,D) → (B,S,H,D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=_auto_interpret(interpret))
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# SSD (model layout: x (B,S,H,P), dt (B,S,H), A_log (H,), B/C (B,S,G,N))
+# ---------------------------------------------------------------------------
+
+def ssd(x, dt, A_log, Bmat, Cmat, D, *, chunk: int = 128,
+        interpret: Optional[bool] = None):
+    b, s, h, p = x.shape
+    g, n = Bmat.shape[2], Bmat.shape[3]
+    rep = h // g
+    xbh = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtbh = dt.transpose(0, 2, 1).reshape(b * h, s)
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    Abh = jnp.tile(A, b)
+    Dbh = jnp.tile(D.astype(jnp.float32), b)
+    Bh = jnp.repeat(Bmat, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    Ch = jnp.repeat(Cmat, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    # kernel applies y += x*D with *undiscretised* x
+    y = _ssd.ssd_scan(xbh, dtbh, Abh, Bh, Ch, Dbh, chunk=chunk,
+                      interpret=_auto_interpret(interpret))
+    return y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# per-layer gradient norms over a stacked pytree
+# ---------------------------------------------------------------------------
+
+def layer_grad_norms(stacked_grads: PyTree, *, block: int = 4096,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Σ over leaves of row-wise ‖·‖² for (L, …) stacked leaves → (L,)."""
+    it = _auto_interpret(interpret)
+    total = None
+    for leaf in jax.tree.leaves(stacked_grads):
+        L = leaf.shape[0]
+        flat = leaf.reshape(L, -1)
+        sq = _lgn.layer_sq_norms_2d(flat, block=block, interpret=it)
+        total = sq if total is None else total + sq
+    return total
+
+
+# ---------------------------------------------------------------------------
+# fused masked SGD update over a stacked pytree
+# ---------------------------------------------------------------------------
+
+def masked_sgd_update(stacked_params: PyTree, stacked_grads: PyTree,
+                      mask: jax.Array, lr, *, block: int = 4096,
+                      interpret: Optional[bool] = None) -> PyTree:
+    it = _auto_interpret(interpret)
+
+    def upd(p, g):
+        L = p.shape[0]
+        out = _mu.masked_sgd_update_2d(p.reshape(L, -1), g.reshape(L, -1),
+                                       mask, lr, block=block, interpret=it)
+        return out.reshape(p.shape)
+
+    return jax.tree.map(upd, stacked_params, stacked_grads)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,H,S,D), k/v (B,K,S,D) → (B,H,S,D)."""
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    g = H // K
+    kf = jnp.repeat(k, g, axis=1)
+    vf = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) / np.sqrt(D)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= j <= i
+    if window:
+        ok &= (i - j) < window
+    s = jnp.where(ok, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vf.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bmat, Cmat, D):
+    """Sequential (exact) SSM recurrence. x (BH,S,P); B/C (BH,S,N); A/D (BH,)."""
+    BH, S, P = x.shape
+    N = Bmat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                    # (BH,P),(BH,),(BH,N),(BH,N)
+        decay = jnp.exp(dtt * Af)                # (BH,)
+        state = state * decay[:, None, None] + \
+            jnp.einsum("bp,bn,b->bpn", xt, bt, dtt)
+        y = jnp.einsum("bn,bpn->bp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((BH, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, state0,
+                         (xf.transpose(1, 0, 2), dtf.T,
+                          Bmat.astype(jnp.float32).transpose(1, 0, 2),
+                          Cmat.astype(jnp.float32).transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + xf * D.astype(jnp.float32)[:, None, None]
+    return y.astype(x.dtype)
+
+
+def layer_sq_norms_ref(g2d: jax.Array) -> jax.Array:
+    """Row-wise squared norms of (L, F)."""
+    return jnp.sum(jnp.square(g2d.astype(jnp.float32)), axis=1)
+
+
+def masked_sgd_update_ref(p, g, mask, lr):
+    """(L,F) masked SGD update."""
+    m = mask.astype(jnp.float32)[:, None]
+    return (p.astype(jnp.float32)
+            - lr * m * g.astype(jnp.float32)).astype(p.dtype)

@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+For each pair this:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. lowers the appropriate step (train_4k → FL train step; prefill_32k →
+     prefill; decode shapes → serve step) against ShapeDtypeStruct inputs,
+  3. compiles, prints ``memory_analysis()`` / ``cost_analysis()``,
+  4. parses collective bytes out of the optimized HLO,
+  5. writes ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` for the
+     roofline harness.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k [--multi-pod] [--all]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ASSIGNED_ARCHS, INPUT_SHAPES, RuntimeConfig,
+                                get_arch)
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model, count_params, count_active_params, init_params
+from repro.sharding import hlo_analysis as H
+from repro.sharding import hlo_cost as HC
+from repro.sharding import rules
+from repro.sharding.fl_step import make_fl_train_step
+from repro.sharding.serve import make_prefill_step, make_serve_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# Archs whose full-context attention cannot serve 500k tokens: they run the
+# sliding-window variant (DESIGN.md §long_500k policy).
+LONG_WINDOW = 4096
+# Replicate-vs-ZeRO3 threshold: replicate the base when the per-chip copy
+# (params/model_axis) stays under ~1.5 GB.
+ZERO3_THRESHOLD_BYTES = 1.5e9
+
+
+def pick_zero3(cfg, mesh) -> bool:
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    nbytes = sum(np.prod(l.shape) * l.dtype.itemsize
+                 for l in jax.tree.leaves(shapes))
+    return nbytes / mesh.shape["model"] > ZERO3_THRESHOLD_BYTES
+
+
+def window_for(cfg, shape) -> int:
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        return cfg.sliding_window or LONG_WINDOW
+    return 0
+
+
+def lower_pair(arch_name: str, shape_name: str, multi_pod: bool,
+               runtime: RuntimeConfig = RuntimeConfig(),
+               sel_frac: float = 0.0):
+    cfg = get_arch(arch_name)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shard_hook = rules.make_shard_hook(mesh, cfg) if runtime.tp_constraints \
+        else None
+    model = Model(cfg, runtime, shard=shard_hook)
+    zero3 = pick_zero3(cfg, mesh) and runtime.zero3
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    params_shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                                   jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    sel_idx = None
+    if sel_frac > 0:
+        L = cfg.n_layers - cfg.first_dense
+        R = max(1, int(round(L * sel_frac)))
+        sel_idx = tuple(range(L - R, L))      # top-R layers, static
+
+    t0 = time.time()
+    if shape.kind == "train":
+        build = make_fl_train_step(model, mesh, zero3=zero3, sel_idx=sel_idx)
+        step_fn, _ = build(params_shapes)
+        batch, masks, sizes, lr = S.fl_round_specs(cfg, shape, mesh,
+                                                   model.n_selectable)
+        lowered = step_fn.lower(params_shapes, batch, masks, sizes, lr)
+        tokens = shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        build = make_prefill_step(model, mesh, zero3=zero3)
+        batch = S.prefill_batch_specs(cfg, shape)
+        fn, _ = build(params_shapes, batch)
+        lowered = fn.lower(params_shapes, batch)
+        tokens = shape.global_batch * shape.seq_len
+    else:  # decode
+        window = window_for(cfg, shape)
+        build = make_serve_step(model, mesh, zero3=zero3, window=window)
+        tok, pos, cache = S.decode_specs(model, shape, window=window)
+        fn, _ = build(params_shapes, cache, shape.global_batch)
+        lowered = fn.lower(params_shapes, tok, pos, cache)
+        tokens = shape.global_batch
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+
+    # scan-aware per-DEVICE cost (hlo_cost multiplies while bodies by trip
+    # count; raw cost_analysis counts scan bodies once — recorded for ref)
+    t0 = time.time()
+    m = HC.analyze(hlo)
+    t_analyze = time.time() - t0
+    flops = m.flops * n_chips            # whole-step totals
+    hbm_bytes = m.hbm_bytes * n_chips
+    coll_total = m.total_coll_bytes * n_chips
+    terms = H.roofline_terms(flops, hbm_bytes, coll_total, n_chips)
+
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params_shapes))
+    # active-param fraction for MoE rooflines
+    if cfg.n_experts:
+        expert_frac = cfg.top_k / cfg.n_experts
+        # expert leaf sizes
+        e_sizes = sum(int(np.prod(l.shape))
+                      for p, l in jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+                      if any(str(getattr(q, "key", "")).endswith(("wi_e", "wo_e"))
+                             for q in p))
+        n_active = int(n_params - e_sizes + e_sizes * expert_frac)
+    else:
+        n_active = n_params
+    model_flops_factor = 6 if shape.kind == "train" else 2
+    model_flops = model_flops_factor * n_active * tokens
+
+    opts = []
+    if runtime.tp_constraints:
+        opts.append("tp")
+    if runtime.remat_scores:
+        opts.append("rematsc")
+    if runtime.sel_upload and sel_idx is not None:
+        opts.append(f"sel{len(sel_idx)}")
+    if runtime.moe_local_dispatch:
+        opts.append("moelocal")
+    report = {
+        "arch": arch_name, "shape": shape_name, "opts": opts,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "zero3": bool(zero3),
+        "kind": shape.kind, "tokens": tokens,
+        "n_params": int(n_params), "n_active_params": int(n_active),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "analyze_s": round(t_analyze, 2),
+        "flops": flops, "hbm_bytes": hbm_bytes,
+        "collective_bytes": coll_total,
+        "collective_by_kind": {k: v * n_chips for k, v in m.coll_bytes.items()},
+        "collective_counts": m.coll_counts,
+        "raw_cost_analysis": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))},
+        "roofline": terms,
+        "dominant": H.dominant_term(terms),
+        "model_flops": model_flops,
+        "useful_flops_frac": (model_flops / flops) if flops else None,
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+        },
+    }
+    return report, compiled
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, save: bool = True,
+            runtime: RuntimeConfig = RuntimeConfig(),
+            sel_frac: float = 0.0) -> dict:
+    report, compiled = lower_pair(arch, shape, multi_pod, runtime=runtime,
+                                  sel_frac=sel_frac)
+    print(json.dumps({k: v for k, v in report.items()
+                      if k not in ("memory", "raw_cost_analysis")},
+                     indent=None, default=str))
+    print("memory_analysis:", report["memory"])
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        suffix = ("__" + "-".join(report["opts"])) if report["opts"] else ""
+        fname = f"{arch}__{shape}__{report['mesh']}{suffix}.json"
+        with open(os.path.join(OUT_DIR, fname), "w") as f:
+            json.dump(report, f, indent=1)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--continue-on-error", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable §Perf levers (tp constraints + chunk remat)")
+    ap.add_argument("--sel-frac", type=float, default=0.0,
+                    help="static selected-layer fraction for sel_upload")
+    args = ap.parse_args()
+
+    runtime = RuntimeConfig()
+    if args.opt:
+        runtime = RuntimeConfig(tp_constraints=True, remat_scores=True,
+                                moe_local_dispatch=True,
+                                sel_upload=args.sel_frac > 0)
+
+    if args.all:
+        archs = ASSIGNED_ARCHS if args.arch is None else [args.arch]
+        shapes = list(INPUT_SHAPES) if args.shape is None else [args.shape]
+        failures = []
+        for a in archs:
+            for s in shapes:
+                try:
+                    run_one(a, s, args.multi_pod,
+                            runtime=runtime, sel_frac=args.sel_frac)
+                except Exception as e:
+                    failures.append((a, s, repr(e)))
+                    traceback.print_exc()
+                    if not args.continue_on_error:
+                        raise
+        if failures:
+            print("FAILURES:", failures)
+            raise SystemExit(1)
+    else:
+        run_one(args.arch, args.shape, args.multi_pod,
+                runtime=runtime, sel_frac=args.sel_frac)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × input-shape) pair.
+
+No device allocation: the dry-run lowers against these.  Training batches
+use the FL layout (clients, per_client, seq) where ``clients`` = product of
+the mesh's client axes (pod×data); serve shapes follow the assignment table
+verbatim.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.model import Model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def n_clients_on(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a in ("pod", "data")]))
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh) -> dict:
+    """FL training batch: (clients, per_client, seq)."""
+    clients = n_clients_on(mesh)
+    assert shape.global_batch % clients == 0, (shape.global_batch, clients)
+    pcb = shape.global_batch // clients
+    S = shape.seq_len
+    if cfg.family == "vlm":
+        text = S - cfg.n_prefix_tokens
+        return {"tokens": SDS((clients, pcb, text), jnp.int32),
+                "patches": SDS((clients, pcb, cfg.n_prefix_tokens, cfg.d_model),
+                               jnp.bfloat16)}
+    if cfg.family == "audio":
+        return {"tokens": SDS((clients, pcb, S), jnp.int32),
+                "frames": SDS((clients, pcb, cfg.enc_seq, cfg.d_model),
+                              jnp.bfloat16)}
+    return {"tokens": SDS((clients, pcb, S), jnp.int32)}
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        return {"tokens": SDS((B, S - cfg.n_prefix_tokens), jnp.int32),
+                "patches": SDS((B, cfg.n_prefix_tokens, cfg.d_model),
+                               jnp.bfloat16)}
+    if cfg.family == "audio":
+        return {"tokens": SDS((B, S), jnp.int32),
+                "frames": SDS((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_specs(model: Model, shape: ShapeConfig, *, window: int = 0):
+    """(tokens, pos, cache) ShapeDtypeStructs for serve_step."""
+    cfg = model.cfg
+    B = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: model.init_cache(B, shape.seq_len, window=window))
+    tokens = SDS((B,), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return tokens, pos, cache
+
+
+def fl_round_specs(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                   n_layers: int) -> tuple[dict, SDS, SDS, SDS]:
+    """(batch, masks, sizes, lr) specs for the FL train step."""
+    clients = n_clients_on(mesh)
+    batch = train_batch_specs(cfg, shape, mesh)
+    masks = SDS((clients, n_layers), jnp.float32)
+    sizes = SDS((clients,), jnp.float32)
+    lr = SDS((), jnp.float32)
+    return batch, masks, sizes, lr

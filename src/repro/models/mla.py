@@ -1,0 +1,134 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are compressed into a low-rank latent ``c_kv`` (rank ``kv_lora_rank``)
+plus a single shared RoPE key channel.  The decode KV cache stores only
+``(c_kv, k_rope)`` — ``kv_lora + qk_rope_dim`` floats per token instead of
+``2·H·hd`` — which is the arch's memory-roofline win for decode_32k.
+
+At attention time the latent is re-expanded through ``w_ukv`` (the
+"naive" formulation; the weight-absorbed matmul reordering is an equivalent
+optimisation we note for §Perf but keep out of the reference path).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.blocks import (NEG_INF, _mask_bias, apply_rope, rms_norm,
+                                 rope_tables)
+
+Array = jax.Array
+
+
+def mla_param_shapes(cfg: ArchConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "ln": (d,),
+        "wq": (d, H * qk),
+        "w_dkv": (d, cfg.kv_lora_rank),                    # down: x -> latent
+        "kv_ln": (cfg.kv_lora_rank,),
+        "w_krope": (d, cfg.qk_rope_dim),                   # shared rope key
+        "w_ukv": (cfg.kv_lora_rank, H * (cfg.qk_nope_dim + cfg.v_head_dim)),
+        "wo": (H * cfg.v_head_dim, d),
+    }
+
+
+def _expand_kv(p: dict, ckv: Array, cfg: ArchConfig):
+    """(B,S,lora) -> k_nope (B,S,H,nope), v (B,S,H,v_dim)."""
+    B, S, _ = ckv.shape
+    H = cfg.n_heads
+    kv = ckv @ p["w_ukv"]
+    kv = kv.reshape(B, S, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    return kv[..., :cfg.qk_nope_dim], kv[..., cfg.qk_nope_dim:]
+
+
+def mla_fwd(p: dict, x: Array, cfg: ArchConfig, *, positions: Array,
+            cache: Optional[dict] = None, cache_pos: Optional[Array] = None,
+            seq_chunk: int = 1024, window: int = 0):
+    """MLA sub-block forward. Returns (out, new_cache)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nope, rope_d, v_dim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(nope + rope_d)
+
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_tables(positions, rope_d, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    ckv = rms_norm(h @ p["w_dkv"], p["kv_ln"], cfg.norm_eps)   # (B,S,lora)
+    k_rope = (h @ p["w_krope"]).reshape(B, S, 1, rope_d)
+    k_rope = apply_rope(k_rope, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        # --- absorbed-matmul decode (DeepSeek-V2 §2.1.2) -----------------
+        # Fold w_ukv into the query/output side so attention runs directly
+        # against the latent cache: no (B,W,H,nope+v) expansion per step.
+        # Cost per token: O(W·lora) instead of O(W·H·(nope+v)).
+        W = cache["ckv"].shape[1]
+        slot = (cache_pos % W).astype(jnp.int32)
+        cckv = lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                                        (0, slot, 0))
+        ckr = lax.dynamic_update_slice(cache["krope"],
+                                       k_rope[:, :, 0].astype(cache["krope"].dtype),
+                                       (0, slot, 0))
+        cpos = lax.dynamic_update_slice(cache["pos"],
+                                        cache_pos[None].astype(jnp.int32), (slot,))
+        k_valid = cpos <= cache_pos
+        bias = _mask_bias(positions, cpos, causal=True, window=window,
+                          k_valid=k_valid)
+        new_cache = {"ckv": cckv, "krope": ckr, "pos": cpos}
+
+        lora = cfg.kv_lora_rank
+        wk = p["w_ukv"].reshape(lora, H, nope + v_dim)[..., :nope]  # (l,H,n)
+        wv = p["w_ukv"].reshape(lora, H, nope + v_dim)[..., nope:]  # (l,H,v)
+        q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope, wk)            # latent q
+        lg = (jnp.einsum("bqhl,bsl->bhqs", q_eff, cckv)
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope, ckr)).astype(jnp.float32)
+        wgt = jax.nn.softmax(lg * scale + bias[None, None], axis=-1)
+        ctx = jnp.einsum("bhqs,bsl->bqhl", wgt.astype(cckv.dtype), cckv)
+        out = jnp.einsum("bqhl,lhv->bqhv", ctx, wv)
+        out = out.reshape(B, S, H * v_dim) @ p["wo"]
+        return out, new_cache
+    else:
+        k_nope, v = _expand_kv(p, ckv, cfg)
+        k_r = k_rope
+        bias = None
+        Sk = S
+
+    # logits = q_nope·k_nope + q_rope·k_rope  (rope part shared across heads)
+    if bias is None and S > seq_chunk and S % seq_chunk == 0:
+        # chunked prefill
+        nck = S // seq_chunk
+        qn = q_nope.reshape(B, nck, seq_chunk, H, nope).transpose(1, 0, 2, 3, 4)
+        qr = q_rope.reshape(B, nck, seq_chunk, H, rope_d).transpose(1, 0, 2, 3, 4)
+        qp = positions.reshape(nck, seq_chunk)
+
+        def step(_, inp):
+            qni, qri, pi = inp
+            b = _mask_bias(pi, positions, causal=True, window=window)
+            lg = (jnp.einsum("bqhn,bshn->bhqs", qni, k_nope)
+                  + jnp.einsum("bqhr,bsxr->bhqs", qri, k_r)).astype(jnp.float32)
+            w = jax.nn.softmax(lg * scale + b[None, None], axis=-1).astype(v.dtype)
+            return None, jnp.einsum("bhqs,bshv->bqhv", w, v)
+
+        _, out = lax.scan(step, None, (qn, qr, qp))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, v_dim)
+    else:
+        if bias is None:
+            bias = _mask_bias(positions, positions, causal=True, window=window)
+        lg = (jnp.einsum("bqhn,bshn->bhqs", q_nope, k_nope)
+              + jnp.einsum("bqhr,bsxr->bhqs", q_rope, k_r)).astype(jnp.float32)
+        w = jax.nn.softmax(lg * scale + bias[None, None], axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqs,bshv->bqhv", w, v)
+
+    out = out.reshape(B, S, H * v_dim) @ p["wo"]
+    return out, new_cache

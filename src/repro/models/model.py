@@ -1,0 +1,705 @@
+"""Model facade: init / loss / prefill / decode for every assigned family.
+
+Families and their block structure (all block stacks are scanned):
+
+* ``dense``  — [attn, mlp] × L
+* ``moe``    — [attn, moe] × L (optionally ``first_dense`` leading dense
+  blocks — deepseek-v2); MLA attention when ``use_mla``
+* ``ssm``    — [mamba2] × L
+* ``hybrid`` — [mamba2] × L with ONE parameter-shared attention block applied
+  after every ``attn_every`` SSM blocks (zamba2); the shared block has a
+  distinct KV cache per application site
+* ``vlm``    — stub patch embeddings prepended to token embeddings,
+  prefix-LM masking (paligemma) or pooled classification (clip-vit)
+* ``audio``  — whisper-style encoder-decoder with cross-attention; stub
+  frame embeddings
+
+The *selectable layer* set (the paper's ``m ∈ {0,1}^L``) is described by
+:func:`layer_layout` — embedding / head / final norms are outside it
+(paper §B.2 freezes them).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, RuntimeConfig
+from repro.models import blocks as B
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssd as SSD
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Layer layout (mask segments)
+# ---------------------------------------------------------------------------
+
+class Segment(NamedTuple):
+    path: str      # top-level key in params
+    count: int     # number of mask entries (stacked leading dim, or 1)
+
+
+def layer_layout(cfg: ArchConfig) -> tuple[Segment, ...]:
+    """Mask segments, in mask-index order. Total == cfg.n_selectable_layers()."""
+    segs: list[Segment] = []
+    if cfg.has_encoder:
+        segs.append(Segment("enc_blocks", cfg.n_enc_layers))
+    if cfg.first_dense:
+        segs.append(Segment("dense0", cfg.first_dense))
+    segs.append(Segment("blocks", cfg.n_layers - cfg.first_dense))
+    if cfg.family == "hybrid":
+        segs.append(Segment("shared_attn", 1))
+    assert sum(s.count for s in segs) == cfg.n_selectable_layers()
+    return tuple(segs)
+
+
+def split_mask(mask: Array, cfg: ArchConfig) -> dict[str, Array]:
+    """Split an (L,)-mask into per-segment arrays keyed by param path."""
+    out, off = {}, 0
+    for seg in layer_layout(cfg):
+        out[seg.path] = mask[off:off + seg.count]
+        off += seg.count
+    return out
+
+
+def apply_layer_mask(tree: PyTree, mask: Array, cfg: ArchConfig,
+                     frozen_zero: bool = True) -> PyTree:
+    """Multiply per-layer subtrees of ``tree`` (grads/updates) by the mask.
+
+    Non-selectable groups (embed, head, norms) are zeroed when
+    ``frozen_zero`` (paper freezes them).
+    """
+    parts = split_mask(mask, cfg)
+    out = {}
+    for key, sub in tree.items():
+        if key in parts:
+            m = parts[key]
+            if m.shape[0] == 1 and key == "shared_attn":
+                out[key] = jax.tree.map(lambda x: x * m[0].astype(x.dtype), sub)
+            else:
+                out[key] = jax.tree.map(
+                    lambda x: x * m.astype(x.dtype).reshape(
+                        (m.shape[0],) + (1,) * (x.ndim - 1)), sub)
+        else:
+            if frozen_zero:
+                out[key] = jax.tree.map(jnp.zeros_like, sub)
+            else:
+                out[key] = sub
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+def _block_shapes(cfg: ArchConfig, kind: str) -> dict:
+    """Per-layer parameter shapes for one block of the given kind."""
+    if kind == "dense":
+        return {**_prefixed("attn_", B.attn_param_shapes(cfg)),
+                **_prefixed("mlp_", B.mlp_param_shapes(cfg))}
+    if kind == "moe":
+        attn = MLA.mla_param_shapes(cfg) if cfg.use_mla else B.attn_param_shapes(cfg)
+        return {**_prefixed("attn_", attn), **_prefixed("moe_", MOE.moe_param_shapes(cfg))}
+    if kind == "moe_dense0":   # deepseek's first dense block: plain MLP sized 4x? use d_ff of shared? use 4*d
+        attn = MLA.mla_param_shapes(cfg) if cfg.use_mla else B.attn_param_shapes(cfg)
+        mlp = B.mlp_param_shapes(cfg, d_ff=cfg.d_ff * max(cfg.top_k + cfg.n_shared_experts, 1))
+        return {**_prefixed("attn_", attn), **_prefixed("mlp_", mlp)}
+    if kind == "ssm":
+        return _prefixed("ssm_", SSD.mamba2_param_shapes(cfg))
+    if kind == "attn_mlp_shared":  # zamba2 shared block
+        return {**_prefixed("attn_", B.attn_param_shapes(cfg)),
+                **_prefixed("mlp_", B.mlp_param_shapes(cfg))}
+    if kind == "encdec":          # whisper decoder block
+        return {**_prefixed("attn_", B.attn_param_shapes(cfg)),
+                **_prefixed("xattn_", B.attn_param_shapes(cfg)),
+                **_prefixed("mlp_", B.mlp_param_shapes(cfg))}
+    raise ValueError(kind)
+
+
+def _prefixed(prefix: str, shapes: dict) -> dict:
+    return {prefix + k: v for k, v in shapes.items()}
+
+
+def _take(p: dict, prefix: str) -> dict:
+    n = len(prefix)
+    return {k[n:]: v for k, v in p.items() if k.startswith(prefix)}
+
+
+def init_params(cfg: ArchConfig, rng: Array) -> PyTree:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(rng, 8)
+    d = cfg.d_model
+    params: dict = {}
+
+    # --- embeddings -------------------------------------------------------
+    embed: dict = {}
+    if cfg.task == "lm" or cfg.family != "vlm" or cfg.vocab_size:
+        embed["tok"] = (jax.random.normal(keys[0], (cfg.vocab_size, d), jnp.float32)
+                        * 0.02).astype(dtype)
+    if cfg.family == "vlm":
+        embed["patch_proj"] = (jax.random.normal(keys[1], (d, d), jnp.float32)
+                               * 0.02).astype(dtype)
+    if cfg.family == "audio":
+        embed["frame_proj"] = (jax.random.normal(keys[1], (d, d), jnp.float32)
+                               * 0.02).astype(dtype)
+    params["embed"] = embed
+
+    # --- block stacks ------------------------------------------------------
+    if cfg.family in ("dense", "vlm"):
+        params["blocks"] = B.init_stacked(keys[2], _block_shapes(cfg, "dense"),
+                                          cfg.n_layers, dtype)
+    elif cfg.family == "moe":
+        if cfg.first_dense:
+            params["dense0"] = B.init_stacked(
+                keys[3], _block_shapes(cfg, "moe_dense0"), cfg.first_dense, dtype)
+        params["blocks"] = B.init_stacked(
+            keys[2], _block_shapes(cfg, "moe"), cfg.n_layers - cfg.first_dense, dtype)
+    elif cfg.family == "ssm":
+        params["blocks"] = B.init_stacked(keys[2], _block_shapes(cfg, "ssm"),
+                                          cfg.n_layers, dtype)
+    elif cfg.family == "hybrid":
+        params["blocks"] = B.init_stacked(keys[2], _block_shapes(cfg, "ssm"),
+                                          cfg.n_layers, dtype)
+        params["shared_attn"] = B.init_stacked(
+            keys[3], _block_shapes(cfg, "attn_mlp_shared"), 0, dtype)
+    elif cfg.family == "audio":
+        params["enc_blocks"] = B.init_stacked(keys[4], _block_shapes(cfg, "dense"),
+                                              cfg.n_enc_layers, dtype)
+        params["blocks"] = B.init_stacked(keys[2], _block_shapes(cfg, "encdec"),
+                                          cfg.n_layers, dtype)
+        params["enc_norm"] = jnp.zeros((d,), dtype)
+    else:
+        raise ValueError(cfg.family)
+
+    params["final_norm"] = jnp.zeros((d,), dtype)
+
+    # --- head --------------------------------------------------------------
+    if cfg.task == "classification":
+        params["head"] = (jax.random.normal(keys[5], (d, cfg.n_classes), jnp.float32)
+                          * 0.02).astype(dtype)
+    elif not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(keys[5], (d, cfg.vocab_size), jnp.float32)
+                          * 0.02).astype(dtype)
+    return params
+
+
+def count_params(params: PyTree) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def count_active_params(cfg: ArchConfig, params: PyTree) -> int:
+    """Active parameters per token (MoE: top_k of n_experts routed)."""
+    total = count_params(params)
+    if not cfg.n_experts:
+        return total
+    routed = sum(params_size
+                 for name, params_size in _moe_expert_sizes(params).items())
+    active_frac = cfg.top_k / cfg.n_experts
+    return int(total - routed + routed * active_frac)
+
+
+def _moe_expert_sizes(params: PyTree) -> dict[str, int]:
+    out = {}
+    blocks = params.get("blocks", {})
+    for name in ("moe_wi_e", "moe_wo_e"):
+        if name in blocks:
+            out[name] = blocks[name].size
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, runtime: RuntimeConfig):
+    return jax.checkpoint(fn) if runtime.remat else fn
+
+
+def _dense_block_fwd(p: dict, x: Array, cfg: ArchConfig, *, positions,
+                     causal, window, prefix_len, seq_chunk,
+                     cache=None, cache_pos=None, cross_kv=None,
+                     remat_chunk=False):
+    attn_out, new_kv = B.attention_fwd(
+        _take(p, "attn_"), x, cfg, positions=positions, cache=cache,
+        cache_pos=cache_pos, causal=causal, window=window,
+        prefix_len=prefix_len, seq_chunk=seq_chunk, remat_chunk=remat_chunk)
+    x = x + attn_out
+    if "xattn_ln" in p:   # whisper decoder cross-attention
+        xo, _ = B.attention_fwd(_take(p, "xattn_"), x, cfg, positions=positions,
+                                cross_kv=cross_kv, causal=False,
+                                seq_chunk=seq_chunk)
+        x = x + xo
+    x = x + B.mlp_fwd(_take(p, "mlp_"), x, cfg)
+    return x, new_kv
+
+
+def _moe_block_fwd(p: dict, x: Array, cfg: ArchConfig, *, positions, window,
+                   seq_chunk, cache=None, cache_pos=None, shard=None,
+                   remat_chunk=False, moe_local=False):
+    if cfg.use_mla:
+        attn_out, new_kv = MLA.mla_fwd(_take(p, "attn_"), x, cfg,
+                                       positions=positions, cache=cache,
+                                       cache_pos=cache_pos, window=window,
+                                       seq_chunk=seq_chunk)
+    else:
+        attn_out, new_kv = B.attention_fwd(_take(p, "attn_"), x, cfg,
+                                           positions=positions, cache=cache,
+                                           cache_pos=cache_pos, causal=True,
+                                           window=window, seq_chunk=seq_chunk,
+                                           remat_chunk=remat_chunk)
+    x = x + attn_out
+    moe_out, stats = MOE.moe_fwd(_take(p, "moe_"), x, cfg, shard=shard,
+                                 local_dispatch=moe_local)
+    return x + moe_out, new_kv, stats.aux_loss
+
+
+class Model:
+    """Facade over one architecture: init, loss, prefill, decode."""
+
+    def __init__(self, cfg: ArchConfig, runtime: RuntimeConfig = RuntimeConfig(),
+                 shard: Optional[Callable] = None):
+        cfg.validate()
+        self.cfg = cfg
+        self.runtime = runtime
+        self.shard = shard or (lambda x, kind=None: x)
+
+    # -- params ------------------------------------------------------------
+    def init(self, rng: Array) -> PyTree:
+        return init_params(self.cfg, rng)
+
+    @property
+    def n_selectable(self) -> int:
+        return self.cfg.n_selectable_layers()
+
+    # -- embedding ---------------------------------------------------------
+    def _embed_tokens(self, params, tokens, pos_offset=0):
+        cfg = self.cfg
+        x = params["embed"]["tok"][tokens]
+        if cfg.rope_theta == 0.0:
+            # no RoPE (whisper / xlm-r / clip): sinusoidal absolute positions
+            S = tokens.shape[1]
+            pos = jnp.arange(S, dtype=jnp.int32) + pos_offset
+            x = x + B.sinusoid_positions(pos, cfg.d_model).astype(x.dtype)
+        return x * (cfg.d_model ** 0.5 if cfg.name.startswith(("gemma", "paligemma")) else 1.0)
+
+    def _head(self, params, h):
+        cfg = self.cfg
+        h = B.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        if cfg.task == "classification":
+            return h @ params["head"]
+        w = params["embed"]["tok"].T if cfg.tie_embeddings else params["head"]
+        logits = h @ w
+        return B.softcap(logits, cfg.logit_softcap)
+
+    # -- sequence forward (train / prefill) ---------------------------------
+    def forward_seq(self, params: PyTree, batch: dict, *,
+                    window_override: Optional[int] = None,
+                    layer_hook: Optional[Callable] = None):
+        """Full-sequence forward. Returns (hidden, aux_loss, prefix_len).
+
+        ``layer_hook(per_layer_params, idx, segment)`` is applied to each
+        scanned layer's (sliced) params — the distributed FL step uses it to
+        ZeRO-gather each layer inside the scan and apply the Eq.(7)
+        grad-scale, so no more than one layer's full weights ever
+        materialise per device (DESIGN.md §4).
+        """
+        cfg, rt = self.cfg, self.runtime
+        hook = layer_hook if layer_hook is not None else (lambda p, i, s: p)
+        window = cfg.sliding_window if window_override is None else window_override
+        aux = jnp.zeros((), jnp.float32)
+        prefix_len = 0
+
+        if cfg.family == "audio":
+            return self._whisper_seq(params, batch, window,
+                                     layer_hook if layer_hook is not None
+                                     else (lambda p, i, s: p))
+
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(params["embed"]["patch_proj"].dtype)
+            px = patches @ params["embed"]["patch_proj"]
+            prefix_len = px.shape[1]
+            if cfg.task == "classification":
+                x = px
+            else:
+                tx = self._embed_tokens(params, batch["tokens"])
+                x = jnp.concatenate([px, tx], axis=1)
+        else:
+            x = self._embed_tokens(params, batch["tokens"])
+
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        causal = cfg.task == "lm"
+        x = self.shard(x, "act_bsd")
+
+        if cfg.family in ("dense", "vlm"):
+            def step(carry, inp):
+                p, idx = inp
+                p = hook(p, idx, "blocks")
+                h, _ = _dense_block_fwd(p, carry, cfg, positions=positions,
+                                        causal=causal, window=window,
+                                        prefix_len=prefix_len,
+                                        seq_chunk=rt.seq_chunk,
+                                        remat_chunk=rt.remat_scores)
+                return self.shard(h, "act_bsd"), None
+            x, _ = lax.scan(_maybe_remat(step, rt), x,
+                            (params["blocks"],
+                             jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+
+        elif cfg.family == "moe":
+            if cfg.first_dense:
+                def step0(carry, p):
+                    if cfg.use_mla:
+                        ao, _ = MLA.mla_fwd(_take(p, "attn_"), carry, cfg,
+                                            positions=positions, window=window,
+                                            seq_chunk=rt.seq_chunk)
+                    else:
+                        ao, _ = B.attention_fwd(_take(p, "attn_"), carry, cfg,
+                                                positions=positions, causal=True,
+                                                window=window, seq_chunk=rt.seq_chunk)
+                    h = carry + ao
+                    h = h + B.mlp_fwd(_take(p, "mlp_"), h, cfg)
+                    return self.shard(h, "act_bsd"), None
+                x, _ = lax.scan(_maybe_remat(step0, rt), x, params["dense0"])
+
+            def step(carry, inp):
+                p, idx = inp
+                p = hook(p, idx, "blocks")
+                h, a = carry
+                h, _, aux_l = _moe_block_fwd(p, h, cfg, positions=positions,
+                                             window=window, seq_chunk=rt.seq_chunk,
+                                             shard=self.shard,
+                                             remat_chunk=rt.remat_scores,
+                                             moe_local=rt.moe_local_dispatch)
+                return (self.shard(h, "act_bsd"), a + aux_l), None
+            nb = cfg.n_layers - cfg.first_dense
+            (x, aux), _ = lax.scan(_maybe_remat(step, rt), (x, aux),
+                                   (params["blocks"],
+                                    jnp.arange(nb, dtype=jnp.int32)))
+
+        elif cfg.family == "ssm":
+            def step(carry, inp):
+                p, idx = inp
+                p = hook(p, idx, "blocks")
+                out, _ = SSD.mamba2_fwd(_take(p, "ssm_"), carry, cfg)
+                return self.shard(carry + out, "act_bsd"), None
+            x, _ = lax.scan(_maybe_remat(step, rt), x,
+                            (params["blocks"],
+                             jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+
+        elif cfg.family == "hybrid":
+            x = self._zamba_seq(params, x, positions, window, hook)
+
+        return x, aux, prefix_len
+
+    def _zamba_seq(self, params, x, positions, window, hook=lambda p, i, s: p):
+        cfg, rt = self.cfg, self.runtime
+        k = cfg.attn_every
+        n_groups, rem = divmod(cfg.n_layers, k)
+        blocks = params["blocks"]
+        grouped = jax.tree.map(
+            lambda a: a[:n_groups * k].reshape((n_groups, k) + a.shape[1:]), blocks)
+        tail = jax.tree.map(lambda a: a[n_groups * k:], blocks)
+        idx_g = jnp.arange(n_groups * k, dtype=jnp.int32).reshape(n_groups, k)
+        idx_t = jnp.arange(n_groups * k, cfg.n_layers, dtype=jnp.int32)
+        shared = params["shared_attn"]
+
+        def mamba_step(carry, inp):
+            p, idx = inp
+            p = hook(p, idx, "blocks")
+            out, _ = SSD.mamba2_fwd(_take(p, "ssm_"), carry, cfg)
+            return self.shard(carry + out, "act_bsd"), None
+
+        def group_step(carry, inp):
+            pg, ig = inp
+            h, _ = lax.scan(_maybe_remat(mamba_step, rt), carry, (pg, ig))
+            h2, _ = _dense_block_fwd(shared, h, cfg, positions=positions,
+                                     causal=True, window=window, prefix_len=0,
+                                     seq_chunk=rt.seq_chunk,
+                                     remat_chunk=rt.remat_scores)
+            return self.shard(h2, "act_bsd"), None
+
+        x, _ = lax.scan(group_step, x, (grouped, idx_g))
+        if rem:
+            x, _ = lax.scan(_maybe_remat(mamba_step, rt), x, (tail, idx_t))
+        return x
+
+    def _whisper_seq(self, params, batch, window, hook=lambda p, i, s: p):
+        cfg, rt = self.cfg, self.runtime
+        frames = batch["frames"].astype(params["embed"]["frame_proj"].dtype)
+        e = frames @ params["embed"]["frame_proj"]
+        Se = e.shape[1]
+        e = e + B.sinusoid_positions(jnp.arange(Se, dtype=jnp.int32),
+                                     cfg.d_model).astype(e.dtype)
+        enc_pos = jnp.arange(Se, dtype=jnp.int32)
+
+        def enc_step(carry, inp):
+            p, idx = inp
+            p = hook(p, idx, "enc_blocks")
+            h, _ = _dense_block_fwd(p, carry, cfg, positions=enc_pos,
+                                    causal=False, window=0, prefix_len=0,
+                                    seq_chunk=rt.seq_chunk,
+                                    remat_chunk=rt.remat_scores)
+            return self.shard(h, "act_bsd"), None
+        e, _ = lax.scan(_maybe_remat(enc_step, rt), e,
+                        (params["enc_blocks"],
+                         jnp.arange(cfg.n_enc_layers, dtype=jnp.int32)))
+        enc_out = B.rms_norm(e, params["enc_norm"], cfg.norm_eps)
+
+        x = self._embed_tokens(params, batch["tokens"])
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+        def dec_step(carry, inp):
+            p, idx = inp
+            p = hook(p, idx, "blocks")
+            cross_kv = B.make_cross_kv(_take(p, "xattn_"), enc_out, cfg)
+            h, _ = _dense_block_fwd(p, carry, cfg, positions=positions,
+                                    causal=True, window=window, prefix_len=0,
+                                    seq_chunk=rt.seq_chunk, cross_kv=cross_kv,
+                                    remat_chunk=rt.remat_scores)
+            return self.shard(h, "act_bsd"), None
+        x, _ = lax.scan(_maybe_remat(dec_step, rt), x,
+                        (params["blocks"],
+                         jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+        return x, jnp.zeros((), jnp.float32), 0
+
+    # -- losses --------------------------------------------------------------
+    def loss(self, params: PyTree, batch: dict, *,
+             window_override: Optional[int] = None,
+             layer_hook: Optional[Callable] = None) -> Array:
+        cfg = self.cfg
+        h, aux, prefix_len = self.forward_seq(params, batch,
+                                              window_override=window_override,
+                                              layer_hook=layer_hook)
+        if cfg.task == "classification":
+            pooled = jnp.mean(h, axis=1)
+            logits = self._head(params, pooled[:, None])[:, 0].astype(jnp.float32)
+            ce = -jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                      batch["label"][:, None], axis=-1)
+            return jnp.mean(ce) + aux
+
+        tokens = batch["tokens"]
+        text_h = h[:, prefix_len:] if prefix_len else h
+        ce = self._lm_ce(params, text_h[:, :-1], tokens[:, 1:])
+        return ce + aux
+
+    def _lm_ce(self, params, h, targets, chunk: int = 1024) -> Array:
+        """Chunked next-token cross-entropy (never materialises (B,S,V) f32)."""
+        cfg = self.cfg
+        h = B.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        w = params["embed"]["tok"].T if cfg.tie_embeddings and cfg.task == "lm" \
+            else params["head"]
+        S = h.shape[1]
+        if S <= chunk or S % chunk != 0:
+            logits = B.softcap(h @ w, cfg.logit_softcap).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, targets[..., None], -1)[..., 0]
+            return jnp.mean(lse - gold)
+
+        nck = S // chunk
+        hc = h.reshape(h.shape[0], nck, chunk, -1).transpose(1, 0, 2, 3)
+        tc = targets.reshape(targets.shape[0], nck, chunk).transpose(1, 0, 2)
+
+        def step(acc, inp):
+            hi, ti = inp
+            logits = B.softcap(hi @ w, cfg.logit_softcap).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, ti[..., None], -1)[..., 0]
+            return acc + jnp.sum(lse - gold), None
+
+        tot, _ = lax.scan(step, jnp.zeros((), jnp.float32), (hc, tc))
+        return tot / (targets.shape[0] * S)
+
+    def logits_seq(self, params: PyTree, batch: dict) -> Array:
+        """Full-sequence logits (prefill_32k lowers this)."""
+        h, _, prefix_len = self.forward_seq(params, batch)
+        if self.cfg.task == "classification":
+            return self._head(params, jnp.mean(h, axis=1)[:, None])[:, 0]
+        return self._head(params, h[:, -1:])[:, 0]   # last-position logits
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, *,
+                   window: int = 0, dtype=None) -> PyTree:
+        """KV/state caches for decode. ``window`` caps attention cache size."""
+        cfg = self.cfg
+        dt = jnp.dtype(dtype or cfg.dtype)
+        W = min(window or max_seq, max_seq)
+        Kh = cfg.n_kv_heads
+        hd = cfg.resolved_head_dim if cfg.n_heads else 0
+
+        def kv(n_layers):
+            shp = (n_layers, batch, W, Kh, hd) if n_layers else (batch, W, Kh, hd)
+            pshape = (n_layers, W) if n_layers else (W,)
+            return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt),
+                    "pos": jnp.full(pshape, jnp.iinfo(jnp.int32).max, jnp.int32)}
+
+        if cfg.family in ("dense", "vlm"):
+            return {"blocks": kv(cfg.n_layers)}
+        if cfg.family == "moe":
+            if cfg.use_mla:
+                def mla_cache(n):
+                    return {"ckv": jnp.zeros((n, batch, W, cfg.kv_lora_rank), dt),
+                            "krope": jnp.zeros((n, batch, W, cfg.qk_rope_dim), dt),
+                            "pos": jnp.full((n, W), jnp.iinfo(jnp.int32).max, jnp.int32)}
+                c = {"blocks": mla_cache(cfg.n_layers - cfg.first_dense)}
+                if cfg.first_dense:
+                    c["dense0"] = mla_cache(cfg.first_dense)
+                return c
+            c = {"blocks": kv(cfg.n_layers - cfg.first_dense)}
+            if cfg.first_dense:
+                c["dense0"] = kv(cfg.first_dense)
+            return c
+        if cfg.family == "ssm":
+            shp = SSD.mamba2_cache_shapes(cfg, batch)
+            return {"blocks": {
+                "conv": jnp.zeros((cfg.n_layers,) + shp["conv"], dt),
+                "state": jnp.zeros((cfg.n_layers,) + shp["state"], dt)}}
+        if cfg.family == "hybrid":
+            shp = SSD.mamba2_cache_shapes(cfg, batch)
+            n_groups = cfg.n_layers // cfg.attn_every
+            return {"blocks": {
+                        "conv": jnp.zeros((cfg.n_layers,) + shp["conv"], dt),
+                        "state": jnp.zeros((cfg.n_layers,) + shp["state"], dt)},
+                    "shared_attn": {
+                        "k": jnp.zeros((n_groups, batch, W, Kh, hd), dt),
+                        "v": jnp.zeros((n_groups, batch, W, Kh, hd), dt),
+                        "pos": jnp.full((n_groups, W), jnp.iinfo(jnp.int32).max,
+                                        jnp.int32)}}
+        if cfg.family == "audio":
+            return {"blocks": kv(cfg.n_layers),
+                    "cross_kv": {
+                        "k": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, Kh, hd), dt),
+                        "v": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, Kh, hd), dt)}}
+        raise ValueError(cfg.family)
+
+    def decode_step(self, params: PyTree, tokens: Array, pos: Array,
+                    cache: PyTree, *, window: int = 0) -> tuple[Array, PyTree]:
+        """One decode step. tokens: (B,) int32; pos: scalar int32.
+
+        Returns (logits (B,V), new_cache).
+        """
+        cfg, rt = self.cfg, self.runtime
+        x = self._embed_tokens(params, tokens[:, None], pos_offset=0)
+        if cfg.rope_theta == 0.0 or cfg.family == "audio":
+            # sinusoidal position of the *current* slot
+            x = (params["embed"]["tok"][tokens[:, None]]
+                 + B.sinusoid_positions(pos[None], cfg.d_model)[None].astype(x.dtype))
+        positions = pos[None].astype(jnp.int32)
+        w = window or cfg.sliding_window
+
+        if cfg.family in ("dense", "vlm"):
+            def step(carry, inp):
+                p, kv = inp
+                h, new_kv = _dense_block_fwd(p, carry, cfg, positions=positions,
+                                             causal=True, window=w, prefix_len=0,
+                                             seq_chunk=rt.seq_chunk, cache=kv,
+                                             cache_pos=pos)
+                return h, new_kv
+            x, new_kv = lax.scan(step, x, (params["blocks"], cache["blocks"]))
+            new_cache = {"blocks": new_kv}
+
+        elif cfg.family == "moe":
+            new_cache = {}
+            if cfg.first_dense:
+                def step0(carry, inp):
+                    p, kv = inp
+                    if cfg.use_mla:
+                        ao, nkv = MLA.mla_fwd(_take(p, "attn_"), carry, cfg,
+                                              positions=positions, cache=kv,
+                                              cache_pos=pos, window=w,
+                                              seq_chunk=rt.seq_chunk)
+                    else:
+                        ao, nkv = B.attention_fwd(_take(p, "attn_"), carry, cfg,
+                                                  positions=positions, cache=kv,
+                                                  cache_pos=pos, causal=True,
+                                                  window=w, seq_chunk=rt.seq_chunk)
+                    h = carry + ao
+                    h = h + B.mlp_fwd(_take(p, "mlp_"), h, cfg)
+                    return h, nkv
+                x, nkv0 = lax.scan(step0, x, (params["dense0"], cache["dense0"]))
+                new_cache["dense0"] = nkv0
+
+            def step(carry, inp):
+                p, kv = inp
+                h, nkv, _ = _moe_block_fwd(p, carry, cfg, positions=positions,
+                                           window=w, seq_chunk=rt.seq_chunk,
+                                           cache=kv, cache_pos=pos,
+                                           shard=self.shard,
+                                           moe_local=rt.moe_local_dispatch)
+                return h, nkv
+            x, nkv = lax.scan(step, x, (params["blocks"], cache["blocks"]))
+            new_cache["blocks"] = nkv
+
+        elif cfg.family == "ssm":
+            def step(carry, inp):
+                p, c = inp
+                out, nc = SSD.mamba2_fwd(_take(p, "ssm_"), carry, cfg, cache=c)
+                return carry + out, nc
+            x, nc = lax.scan(step, x, (params["blocks"], cache["blocks"]))
+            new_cache = {"blocks": nc}
+
+        elif cfg.family == "hybrid":
+            x, new_cache = self._zamba_decode(params, x, positions, pos, cache, w)
+
+        elif cfg.family == "audio":
+            def step(carry, inp):
+                p, kv, xkv = inp
+                h, nkv = _dense_block_fwd(p, carry, cfg, positions=positions,
+                                          causal=True, window=w, prefix_len=0,
+                                          seq_chunk=rt.seq_chunk, cache=kv,
+                                          cache_pos=pos,
+                                          cross_kv=(xkv["k"], xkv["v"]))
+                return h, nkv
+            x, nkv = lax.scan(step, x, (params["blocks"], cache["blocks"],
+                                        cache["cross_kv"]))
+            new_cache = {"blocks": nkv, "cross_kv": cache["cross_kv"]}
+        else:
+            raise ValueError(cfg.family)
+
+        logits = self._head(params, x)[:, 0]
+        return logits, new_cache
+
+    def _zamba_decode(self, params, x, positions, pos, cache, w):
+        cfg = self.cfg
+        k = cfg.attn_every
+        n_groups, rem = divmod(cfg.n_layers, k)
+        blocks = params["blocks"]
+        grouped = jax.tree.map(
+            lambda a: a[:n_groups * k].reshape((n_groups, k) + a.shape[1:]), blocks)
+        tail = jax.tree.map(lambda a: a[n_groups * k:], blocks)
+        mcache = cache["blocks"]
+        gcache = jax.tree.map(
+            lambda a: a[:n_groups * k].reshape((n_groups, k) + a.shape[1:]), mcache)
+        tcache = jax.tree.map(lambda a: a[n_groups * k:], mcache)
+        shared = params["shared_attn"]
+
+        def mamba_step(carry, inp):
+            p, c = inp
+            out, nc = SSD.mamba2_fwd(_take(p, "ssm_"), carry, cfg, cache=c)
+            return carry + out, nc
+
+        def group_step(carry, inp):
+            pg, cg, kvg = inp
+            h, ncg = lax.scan(mamba_step, carry, (pg, cg))
+            h2, nkv = _dense_block_fwd(shared, h, cfg, positions=positions,
+                                       causal=True, window=w, prefix_len=0,
+                                       seq_chunk=self.runtime.seq_chunk,
+                                       cache=kvg, cache_pos=pos)
+            return h2, (ncg, nkv)
+
+        x, (new_g, new_kv) = lax.scan(group_step, x,
+                                      (grouped, gcache, cache["shared_attn"]))
+        new_m = jax.tree.map(
+            lambda a: a.reshape((n_groups * k,) + a.shape[2:]), new_g)
+        if rem:
+            x, new_t = lax.scan(mamba_step, x, (tail, tcache))
+            new_m = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                 new_m, new_t)
+        return x, {"blocks": new_m, "shared_attn": new_kv}

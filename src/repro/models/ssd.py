@@ -1,0 +1,215 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+The SSD insight — "the SSM scan *is* a semiseparable matmul" — maps directly
+onto the TPU MXU: sequences are processed in chunks where the intra-chunk
+work is dense matmuls and only a tiny (H,P,N) state crosses chunk boundaries
+through a sequential recurrence.  :func:`ssd_chunked` is the jnp reference;
+:mod:`repro.kernels.ssd_scan` is the Pallas TPU kernel with the same math.
+
+Shapes: x (B,S,H,P) — H SSD heads of headdim P; dt (B,S,H); A_log (H,);
+B/C (B,S,G,N) — G groups of state size N (broadcast over H//G heads).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.blocks import rms_norm
+
+Array = jax.Array
+
+
+def segsum(x: Array) -> Array:
+    """(..., T) -> (..., T, T): out[i,j] = sum_{k=j+1..i} x[k]; -inf above diag."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    idx = jnp.arange(T)
+    return jnp.where(idx[:, None] >= idx[None, :], diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A_log: Array, B: Array, C: Array,
+                D: Optional[Array], chunk: int,
+                initial_state: Optional[Array] = None):
+    """Chunked SSD forward. Returns (y, final_state).
+
+    y: (B,S,H,P); final_state: (B,H,P,N).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc, cl = s // chunk, chunk
+    rep = h // g
+
+    A = -jnp.exp(A_log.astype(jnp.float32))                   # (h,)
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A                                              # (b,s,h)
+    xdt = (x.astype(jnp.float32) * dtf[..., None])            # (b,s,h,p)
+
+    # broadcast groups over heads
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=2)       # (b,s,h,n)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+
+    # chunked views
+    xc = xdt.reshape(b, nc, cl, h, p)
+    Bc = Bh.reshape(b, nc, cl, h, n)
+    Cc = Ch.reshape(b, nc, cl, h, n)
+    dAc = dA.reshape(b, nc, cl, h)
+    dAcs = jnp.cumsum(dAc, axis=2)                            # (b,nc,cl,h)
+
+    # --- intra-chunk (dense matmuls; MXU work) ---------------------------
+    L = jnp.exp(segsum(dAc.transpose(0, 1, 3, 2)))            # (b,nc,h,cl,cl)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores * L, xc)
+
+    # --- chunk states ----------------------------------------------------
+    decay_states = jnp.exp(dAcs[:, :, -1:, :] - dAcs)         # (b,nc,cl,h)
+    states = jnp.einsum("bckhn,bckh,bckhp->bchpn", Bc, decay_states, xc)
+
+    # --- inter-chunk recurrence (sequential over chunks) ------------------
+    chunk_decay = jnp.exp(dAcs[:, :, -1, :])                  # (b,nc,h)
+    state0 = (initial_state.astype(jnp.float32) if initial_state is not None
+              else jnp.zeros((b, h, p, n), jnp.float32))
+
+    def step(carry, inp):
+        st_c, dec_c = inp                                     # (b,h,p,n), (b,h)
+        prev = carry
+        new = prev * dec_c[..., None, None] + st_c
+        return new, prev                                      # emit state *entering* chunk
+
+    final_state, prev_states = lax.scan(
+        step, state0, (states.transpose(1, 0, 2, 3, 4),
+                       chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (b,nc,h,p,n)
+
+    decay_out = jnp.exp(dAcs)                                 # (b,nc,cl,h)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Cc, prev_states, decay_out)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state: Array, x: Array, dt: Array, A_log: Array,
+                    B: Array, C: Array, D: Optional[Array]):
+    """Single-token SSD update. x (B,1,H,P); state (B,H,P,N). O(1) in context."""
+    b = x.shape[0]
+    h, p = x.shape[2], x.shape[3]
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)[:, 0]                        # (b,h)
+    dA = jnp.exp(dtf * A)                                     # (b,h)
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=2)[:, 0]  # (b,h,n)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=2)[:, 0]
+    xf = x.astype(jnp.float32)[:, 0]                          # (b,h,p)
+    new_state = (state.astype(jnp.float32) * dA[..., None, None]
+                 + jnp.einsum("bhp,bhn,bh->bhpn", xf, Bh, dtf))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state)
+    if D is not None:
+        y = y + xf * D.astype(jnp.float32)[None, :, None]
+    return y[:, None].astype(x.dtype), new_state.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_param_shapes(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in = cfg.d_inner
+    h = cfg.resolved_ssm_heads
+    g, n, K = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    conv_dim = d_in + 2 * g * n
+    return {
+        "ln": (d,),
+        "in_proj": (d, 2 * d_in + 2 * g * n + h),   # z | x | B | C | dt
+        "conv_w": (K, conv_dim),
+        "conv_b": (conv_dim,),
+        "dt_bias": (h,),
+        "A_log": (h,),
+        "D": (h,),
+        "gate_ln": (d_in,),
+        "out_proj": (d_in, d),
+    }
+
+
+def _split_in_proj(zxbcdt: Array, cfg: ArchConfig):
+    d_in = cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.resolved_ssm_heads
+    idx = [d_in, 2 * d_in, 2 * d_in + g * n, 2 * d_in + 2 * g * n]
+    z = zxbcdt[..., :idx[0]]
+    xbc = zxbcdt[..., idx[0]:idx[3]]        # conv applies to x|B|C jointly
+    dt = zxbcdt[..., idx[3]:]
+    return z, xbc, dt
+
+
+def _causal_conv(u: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d via K shifted adds. u: (B,S,Cd), w: (K,Cd)."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    S = u.shape[1]
+    out = sum(pad[:, k:k + S] * w[k] for k in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _conv_decode(u: Array, conv_cache: Array, w: Array, b: Array):
+    """u: (B,1,Cd); conv_cache: (B,K-1,Cd) holding previous inputs."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_cache, u], axis=1)          # (B,K,Cd)
+    out = jnp.einsum("bkc,kc->bc", window, w)[:, None]
+    new_cache = window[:, 1:]
+    return jax.nn.silu(out + b), new_cache
+
+
+def mamba2_fwd(p: dict, x: Array, cfg: ArchConfig, *,
+               cache: Optional[dict] = None):
+    """Mamba2 block (pre-norm, residual added by caller).
+
+    cache: {"conv": (B,K-1,Cd), "state": (B,H,P,N)} for decode.
+    Returns (out, new_cache).
+    """
+    B_, S, d = x.shape
+    d_in = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = cfg.resolved_ssm_heads
+    phead = d_in // h
+
+    hid = rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xbc, dt = _split_in_proj(hid @ p["in_proj"], cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    new_cache = None
+    if cache is None:
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        xs = xbc[..., :d_in].reshape(B_, S, h, phead)
+        Bs = xbc[..., d_in:d_in + g * n].reshape(B_, S, g, n)
+        Cs = xbc[..., d_in + g * n:].reshape(B_, S, g, n)
+        y, _ = ssd_chunked(xs, dt, p["A_log"], Bs, Cs, p["D"],
+                           min(cfg.ssm_chunk, S))
+    else:
+        xbc, conv_cache = _conv_decode(xbc, cache["conv"], p["conv_w"], p["conv_b"])
+        xs = xbc[..., :d_in].reshape(B_, 1, h, phead)
+        Bs = xbc[..., d_in:d_in + g * n].reshape(B_, 1, g, n)
+        Cs = xbc[..., d_in + g * n:].reshape(B_, 1, g, n)
+        y, state = ssd_decode_step(cache["state"], xs, dt, p["A_log"], Bs, Cs, p["D"])
+        new_cache = {"conv": conv_cache, "state": state}
+
+    y = y.reshape(B_, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_ln"], cfg.norm_eps)
+    return y @ p["out_proj"], new_cache
+
+
+def mamba2_cache_shapes(cfg: ArchConfig, batch: int) -> dict:
+    d_in = cfg.d_inner
+    h = cfg.resolved_ssm_heads
+    conv_dim = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": (batch, cfg.ssm_conv - 1, conv_dim),
+        "state": (batch, h, d_in // h, cfg.ssm_state),
+    }

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (Optimizer, adamw, apply_updates,  # noqa: F401
+                                    cosine_schedule, sgd)

@@ -1,0 +1,78 @@
+"""Minimal optimizer library (optax is not available offline).
+
+The paper's algorithm is plain SGD (Eq. 3/6); AdamW exists for the
+"pretraining" phase that stands in for the foundation-model checkpoint we
+cannot download, and as a beyond-paper server-optimizer option.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    # update(grads, state, params) -> (updates, new_state); apply as p + u
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mu": jax.tree.map(jnp.zeros_like, params)}
+        return {}
+
+    def update(grads, state, params=None):
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                              state["mu"], grads)
+            return jax.tree.map(lambda m: -lr * m, mu), {"mu": mu}
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def u(m_, v_, p):
+            step = m_ / bc1 / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        return (jax.tree.map(u, m, v, params),
+                {"m": m, "v": v, "t": t})
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0):
+    def lr_at(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        return base_lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return lr_at

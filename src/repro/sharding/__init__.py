@@ -1,0 +1,4 @@
+from repro.sharding import rules  # noqa: F401
+from repro.sharding.fl_step import (make_fl_train_step,  # noqa: F401
+                                    make_fl_train_step_tau)
+from repro.sharding.serve import make_prefill_step, make_serve_step  # noqa: F401

@@ -1,0 +1,109 @@
+"""Roofline-term extraction from compiled HLO.
+
+``cost_analysis()`` gives FLOPs and HBM bytes; collective traffic is not in
+there, so we parse the optimized HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shapes like  bf16[2,4096,128]  or tuple elements; capture dtype + dims
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum *operand* bytes of collective ops in optimized HLO text.
+
+    Operand shapes appear inline in optimized dumps:
+      %ag = bf16[16,128]{1,0} all-gather(bf16[2,128]{1,0} %p), ...
+    For ops whose operands are not annotated we fall back to output size.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        # operand section = inside the first (...) after the op name
+        start = line.index(m.group(2) + "(") if m.group(2) + "(" in line else -1
+        if start >= 0:
+            rest = line[start + len(kind) + 1:]
+            depth = 1
+            out = []
+            for ch in rest:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                out.append(ch)
+            operand_text = "".join(out)
+        else:
+            operand_text = ""
+        nbytes = _shape_bytes(operand_text)
+        if nbytes == 0:
+            nbytes = _shape_bytes(m.group(1))     # fall back to output shape
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   n_chips: int) -> dict:
+    """The three per-step roofline terms, in seconds."""
+    return {
+        "compute_s": flops / (n_chips * PEAK_FLOPS),
+        "memory_s": hbm_bytes / (n_chips * HBM_BW),
+        "collective_s": coll_bytes / (n_chips * ICI_BW),
+    }
+
+
+def dominant_term(terms: dict) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k]).replace("_s", "")

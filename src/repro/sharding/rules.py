@@ -1,0 +1,238 @@
+"""Parameter / activation / cache partition rules for the production mesh.
+
+Mesh axes: ``('data', 'model')`` single-pod, ``('pod', 'data', 'model')``
+multi-pod.  The *client* axes (pod×data) carry the FL cohort — one client
+per (pod,data) coordinate — and double as the ZeRO-3 storage axis for the
+frozen model base.  The ``model`` axis is Megatron-style tensor parallelism
+(heads / ff / vocab / experts) and stays in XLA's auto-sharding hands.
+
+Rules are name-based over the stacked-parameter layout; every rule returns
+a PartitionSpec of the same rank as the leaf.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+
+DATA = "data"     # ZeRO-3 / client axis
+MODEL = "model"   # tensor-parallel axis
+
+
+def _divisible(n: int, axis_size: int) -> bool:
+    return axis_size > 0 and n % axis_size == 0
+
+
+_SUBBLOCK_PREFIXES = ("attn_", "xattn_", "mlp_", "moe_", "ssm_")
+
+
+def param_spec(path: tuple[str, ...], leaf, cfg: ArchConfig, *,
+               zero3: bool, mesh_shape: dict[str, int]) -> P:
+    """PartitionSpec for one parameter leaf (stacked or not)."""
+    name = path[-1]
+    for pref in _SUBBLOCK_PREFIXES:      # stacked blocks prefix their leaves
+        if name.startswith(pref):
+            name = name[len(pref):]
+            break
+    group = path[0]
+    shape = leaf.shape
+    dsz, msz = mesh_shape.get(DATA, 1), mesh_shape.get(MODEL, 1)
+    d_axis = DATA if zero3 else None
+
+    stacked = group in ("blocks", "enc_blocks", "dense0")
+    off = 1 if stacked else 0          # leading (L,) axis never sharded
+
+    def spec(*dims):
+        full = [None] * off + list(dims)
+        full += [None] * (len(shape) - len(full))
+        # drop axes that do not divide (tuple entries: product must divide)
+        out = []
+        for dim, ax in zip(shape, full):
+            if isinstance(ax, tuple):
+                size = int(np.prod([mesh_shape.get(a, 1) for a in ax]))
+                if not _divisible(dim, size):
+                    ax = tuple(a for a in ax if a == MODEL) or None
+                    if isinstance(ax, tuple):
+                        ax = ax[0] if _divisible(dim, msz) else None
+            elif ax == DATA and not _divisible(dim, dsz):
+                ax = None
+            elif ax == MODEL and not _divisible(dim, msz):
+                ax = None
+            out.append(ax)
+        return P(*out)
+
+    # The ZeRO-3 ('data') axis is CO-LOCATED with 'model' on the tensor-
+    # parallel dim (Megatron column/row dim): contraction dims stay
+    # unsharded, so consumers gather the weight shard per layer instead of
+    # all-reducing activations against an in-place-sharded contraction —
+    # the pathology the first roofline pass exposed (EXPERIMENTS.md §Perf).
+    tp = (MODEL, DATA) if zero3 else MODEL
+
+    # --- embeddings / head --------------------------------------------------
+    if group == "embed":
+        if name == "tok":
+            return spec(tp, None)                  # (V, d)
+        return spec(None, tp)                      # projectors (d, d)
+    if group == "head":
+        return spec(None, tp)                      # (d, V) or (d, classes)
+    if group in ("final_norm", "enc_norm"):
+        return P(None)
+
+    # --- attention (column: qkv — row: wo, both on the H·hd dim) -----------
+    if name in ("wq", "wk", "wv", "w_dkv", "w_krope"):
+        return spec(None, tp)                      # (…, d, H·hd)
+    if name == "w_ukv":
+        return spec(None, tp)                      # (…, lora, H·(nope+v))
+    if name == "wo":
+        return spec(tp, None)                      # (…, H·hd, d)
+    if name in ("bq", "bk", "bv"):
+        return spec(MODEL)
+
+    # --- dense MLP (column: wi — row: wo, both on the ff dim) ----------------
+    if name == "wi" or name == "wi_s":
+        return spec(None, tp)                      # (…, d, 2ff)
+    if name == "wo" or name == "wo_s":
+        return spec(tp, None)                      # (…, ff, d)
+
+    # --- MoE ------------------------------------------------------------------
+    if name == "router":
+        return spec(None, None)                    # (…, d, E)
+    if name == "wi_e":                             # (…, E, d, F)
+        if _divisible(cfg.n_experts, msz):
+            return spec(MODEL, None, DATA if zero3 else None)
+        return spec(None, None, tp)
+    if name == "wo_e":                             # (…, E, F, d)
+        if _divisible(cfg.n_experts, msz):
+            return spec(MODEL, DATA if zero3 else None, None)
+        return spec(None, tp, None)
+
+    # --- SSM --------------------------------------------------------------------
+    if name == "in_proj":
+        return spec(None, tp)                      # (…, d, zxbcdt)
+    if name == "out_proj":
+        return spec(tp, None)                      # (…, d_in, d)
+    if name == "conv_w":
+        return spec(None, MODEL)                   # (…, K, conv_dim)
+    if name == "conv_b":
+        return spec(MODEL)
+
+    # small vectors (ln / dt_bias / A_log / D / gate_ln / kv_ln)
+    return P(*([None] * len(shape)))
+
+
+def params_pytree_specs(cfg: ArchConfig, params_shapes: PyTree, *,
+                        zero3: bool, mesh_shape: dict[str, int]) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for path, leaf in flat:
+        keys = tuple(p.key for p in path if hasattr(p, "key"))
+        specs.append(param_spec(keys, leaf, cfg, zero3=zero3,
+                                mesh_shape=mesh_shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def client_axes(mesh) -> tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n in ("pod", DATA))
+
+
+def batch_spec_train(mesh) -> P:
+    """FL training batch (clients, per_client, seq): clients over pod×data."""
+    return P(client_axes(mesh))
+
+
+def batch_spec_serve(mesh, batch: int) -> P:
+    """Inference batch dim over the client axes when divisible."""
+    ca = client_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in ca]))
+    return P(ca) if batch % n == 0 else P(None)
+
+
+def cache_specs(cfg: ArchConfig, cache_shapes: PyTree, mesh,
+                batch: int) -> PyTree:
+    """KV/state cache specs: batch over client axes, heads-or-seq over model."""
+    msz = mesh.shape[MODEL]
+    ca = client_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in ca]))
+    b_ax = ca if batch % n == 0 else None
+
+    def spec_for(path, leaf):
+        name = path[-1]
+        shape = leaf.shape
+        # layouts: kv (L,B,W,K,hd) | pos (L,W) | mla ckv (L,B,W,lora)
+        # ssm conv (L,B,K-1,Cd) | ssm state (L,B,H,P,N) | shared (G,B,W,K,hd)
+        if name == "pos":
+            return P(*([None] * len(shape)))
+        if name in ("k", "v"):
+            L_, B_, W_, K_, hd_ = shape
+            kv_ax = MODEL if _divisible(K_, msz) else None
+            w_ax = MODEL if kv_ax is None and _divisible(W_, msz) else None
+            return P(None, b_ax, w_ax, kv_ax, None)
+        if name == "ckv" or name == "krope":
+            L_, B_, W_, R_ = shape
+            r_ax = MODEL if _divisible(R_, msz) else None
+            return P(None, b_ax, None, r_ax)
+        if name == "conv":
+            return P(None, b_ax, None, MODEL if _divisible(shape[-1], msz) else None)
+        if name == "state":
+            L_, B_, H_, P_, N_ = shape
+            h_ax = MODEL if _divisible(H_, msz) else None
+            return P(None, b_ax, h_ax, None, None)
+        return P(*([None] * len(shape)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    specs = []
+    for path, leaf in flat:
+        keys = tuple(p.key for p in path if hasattr(p, "key"))
+        specs.append(spec_for(keys, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_shard_hook(mesh, cfg: ArchConfig):
+    """Activation sharding-constraint hook for Model (auto 'model' axis).
+
+    Used by the §Perf-optimised paths; the naive baseline passes no hook.
+    """
+    msz = mesh.shape[MODEL]
+    expert_parallel = cfg.n_experts and cfg.n_experts % msz == 0
+
+    def shard(x, kind=None):
+        spec = None
+        if kind == "expert_ecf":          # expert hidden (E, C, ff)
+            spec = P(MODEL, None, None) if expert_parallel \
+                else P(None, None, MODEL)
+        elif kind == "expert_ecd":        # expert in/out (E, C, d)
+            spec = P(MODEL, None, None) if expert_parallel else None
+        if spec is None:
+            return x
+        try:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        except Exception:
+            return x
+
+    return shard
+
+
+def zero3_gather_axis(spec: P) -> Optional[int]:
+    """Index of the client/ZeRO axis in a param spec (None if replicated)."""
+    for i, entry in enumerate(spec):
+        names = entry if isinstance(entry, tuple) else (entry,)
+        if DATA in names:
+            return i
+    return None

@@ -1,0 +1,72 @@
+"""Inference steps on the production mesh: prefill and single-token decode.
+
+Plain pjit (no client-manual region — inference of the fine-tuned global
+model has no per-client aggregation).  Parameter storage reuses the training
+rules (ZeRO-3 over 'data' for archs too big to replicate; XLA inserts the
+per-layer gathers inside the scan), KV caches shard batch over the client
+axes and heads-or-sequence over 'model' (rules.cache_specs).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.sharding import rules
+
+
+def make_prefill_step(model: Model, mesh, *, zero3: bool = True):
+    cfg = model.cfg
+    mesh_shape = {n: mesh.shape[n] for n in mesh.axis_names}
+    ca = rules.client_axes(mesh)
+
+    def build(params_shapes, batch_shapes):
+        specs = rules.params_pytree_specs(cfg, params_shapes, zero3=zero3,
+                                          mesh_shape=mesh_shape)
+        batch0 = jax.tree.leaves(batch_shapes)[0].shape[0]
+        b_spec = rules.batch_spec_serve(mesh, batch0)
+
+        def prefill(params, batch):
+            return model.logits_seq(params, batch)
+
+        in_sh = (rules.named(mesh, specs),
+                 jax.tree.map(lambda _: NamedSharding(mesh, b_spec),
+                              batch_shapes))
+        out_sh = NamedSharding(mesh, b_spec)
+        return jax.jit(prefill, in_shardings=in_sh, out_shardings=out_sh), specs
+
+    return build
+
+
+def make_serve_step(model: Model, mesh, *, zero3: bool = True,
+                    window: int = 0):
+    """Single-token decode with a KV cache of the target context length."""
+    cfg = model.cfg
+    mesh_shape = {n: mesh.shape[n] for n in mesh.axis_names}
+
+    def build(params_shapes, cache_shapes, batch: int):
+        specs = rules.params_pytree_specs(cfg, params_shapes, zero3=zero3,
+                                          mesh_shape=mesh_shape)
+        c_specs = rules.cache_specs(cfg, cache_shapes, mesh, batch)
+        b_spec = rules.batch_spec_serve(mesh, batch)
+
+        def serve(params, tokens, pos, cache):
+            logits, new_cache = model.decode_step(params, tokens, pos, cache,
+                                                  window=window)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, logits, new_cache
+
+        in_sh = (rules.named(mesh, specs),
+                 NamedSharding(mesh, b_spec),
+                 NamedSharding(mesh, P()),
+                 rules.named(mesh, c_specs))
+        out_sh = (NamedSharding(mesh, b_spec),
+                  NamedSharding(mesh, b_spec),
+                  rules.named(mesh, c_specs))
+        return jax.jit(serve, in_shardings=in_sh, out_shardings=out_sh), \
+            (specs, c_specs)
+
+    return build

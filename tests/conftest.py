@@ -1,0 +1,44 @@
+"""Shared test fixtures.
+
+NOTE: xla_force_host_platform_device_count is deliberately NOT set here —
+smoke tests and benches must see 1 device.  Multi-device tests
+(test_fl_distributed.py) spawn subprocesses with their own XLA_FLAGS.
+"""
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B, S, key=None):
+    """Synthetic batch matching an arch's input contract."""
+    import jax.numpy as jnp
+    key = key if key is not None else jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(ks[0], (B, cfg.n_prefix_tokens,
+                                                     cfg.d_model))
+        if cfg.task == "lm":
+            batch["tokens"] = jax.random.randint(
+                ks[1], (B, max(S - cfg.n_prefix_tokens, 4)), 0, cfg.vocab_size)
+        else:
+            batch["label"] = jax.random.randint(ks[1], (B,), 0, cfg.n_classes)
+    elif cfg.family == "audio":
+        batch["frames"] = jax.random.normal(ks[0], (B, cfg.enc_seq, cfg.d_model))
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+        if cfg.task == "classification":
+            batch["label"] = jax.random.randint(ks[2], (B,), 0, cfg.n_classes)
+    return batch

@@ -1,0 +1,68 @@
+"""Eq.(5)-(7) aggregation semantics on real parameter pytrees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
+from repro.core import aggregation as agg
+from repro.core.masks import aggregation_weights, count_layer_params
+from repro.models.model import Model, apply_layer_mask
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = reduced(get_arch("tinyllama-1.1b"), n_layers=3, d_model=64)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def test_masked_grad_zeroes_unselected(model_and_params):
+    model, params = model_and_params
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          model.cfg.vocab_size)}
+    g = jax.grad(model.loss)(params, batch)
+    mask = jnp.array([1.0, 0.0, 1.0])
+    gm = apply_layer_mask(g, mask, model.cfg)
+    # layer 1 zeroed, layers 0/2 intact
+    for name, leaf in gm["blocks"].items():
+        assert float(jnp.abs(leaf[1]).max()) == 0.0, name
+        orig = g["blocks"][name]
+        np.testing.assert_array_equal(np.asarray(leaf[0]), np.asarray(orig[0]))
+    # frozen groups zeroed
+    assert all(float(jnp.abs(x).max()) == 0.0
+               for x in jax.tree.leaves(gm["embed"]))
+
+
+def test_aggregate_weighted_mean(model_and_params):
+    """Eq.(5): layer selected by clients {0,1} with d = (1, 3) → w = ¼, ¾."""
+    model, params = model_and_params
+    cfg = model.cfg
+    ones = jax.tree.map(jnp.ones_like, params)
+    twos = jax.tree.map(lambda x: 2 * jnp.ones_like(x), params)
+    masks = jnp.array([[1, 1, 0], [1, 0, 0]], jnp.float32)
+    sizes = jnp.array([1.0, 3.0])
+    out = agg.aggregate([ones, twos], masks, sizes, cfg)
+    b = out["blocks"]["attn_wq"]
+    np.testing.assert_allclose(np.asarray(b[0]), 0.25 * 1 + 0.75 * 2)  # both
+    np.testing.assert_allclose(np.asarray(b[1]), 1.0)                  # only c0
+    np.testing.assert_allclose(np.asarray(b[2]), 0.0)                  # nobody
+
+
+def test_apply_update_direction(model_and_params):
+    model, params = model_and_params
+    upd = jax.tree.map(jnp.ones_like, params)
+    new = agg.apply_update(params, upd, lr=0.5)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs((a - b) + 0.5))),
+                     new, params)
+    assert max(jax.tree.leaves(d)) < 1e-6
+
+
+def test_count_layer_params(model_and_params):
+    model, params = model_and_params
+    counts = count_layer_params(params, model.cfg)
+    assert counts.shape == (3,)
+    assert np.all(counts == counts[0])     # identical stacked layers
+    per_block = sum(int(np.prod(x.shape[1:]))
+                    for x in jax.tree.leaves(params["blocks"]))
+    assert counts[0] == per_block

@@ -1,0 +1,63 @@
+"""Scan-aware HLO cost model: known-workload validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sharding.hlo_cost import HloCostModel, analyze, shape_bytes
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[2,3]{1,0}") == 24
+    assert shape_bytes("bf16[4,4]") == 32
+    assert shape_bytes("(s32[], f32[8,8]{1,0})") == 4 + 256
+    assert shape_bytes("pred[]") == 1
+
+
+def test_plain_matmul_flops():
+    M, K, N = 32, 64, 128
+    c = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((K, N), jnp.float32)).compile()
+    m = analyze(c.as_text())
+    assert m.flops == pytest.approx(2 * M * K * N, rel=0.05)
+
+
+def test_scan_trip_count_scaling():
+    L, M, N = 9, 32, 64
+    def g(x, ws):
+        def step(c, w):
+            return c @ w, None
+        out, _ = jax.lax.scan(step, x, ws)
+        return out.sum()
+    c = jax.jit(g).lower(jax.ShapeDtypeStruct((M, N), jnp.float32),
+                         jax.ShapeDtypeStruct((L, N, N), jnp.float32)).compile()
+    m = analyze(c.as_text())
+    expect = 2 * M * N * N * L
+    assert m.flops == pytest.approx(expect, rel=0.1)
+
+
+def test_nested_scan_scaling():
+    Lo, Li, N = 4, 3, 32
+    def g(x, ws):
+        def outer(c, wrow):
+            def inner(ci, w):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, wrow)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, ws)
+        return out.sum()
+    c = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((N, N), jnp.float32),
+        jax.ShapeDtypeStruct((Lo, Li, N, N), jnp.float32)).compile()
+    m = analyze(c.as_text())
+    expect = 2 * N ** 3 * Lo * Li
+    assert m.flops == pytest.approx(expect, rel=0.15)
+
+
+def test_entry_detected():
+    c = jax.jit(lambda x: x + 1).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)).compile()
+    model = HloCostModel(c.as_text())
+    assert model.entry is not None
+    assert model.metrics().flops >= 0

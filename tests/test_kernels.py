@@ -1,0 +1,124 @@
+"""Pallas kernel sweeps: shapes × dtypes vs the pure-jnp oracles in ref.py.
+
+All kernels run in interpret mode on CPU (the kernel bodies execute exactly
+as they would on TPU, minus the hardware tiling)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as fa_raw
+from repro.kernels.layer_grad_norm import layer_sq_norms_2d
+from repro.kernels.masked_update import masked_sgd_update_2d
+from repro.kernels.ssd_scan import ssd_scan
+
+ATTN_CASES = [
+    # (B, H, K, S, D, causal, window, dtype)
+    (2, 4, 2, 128, 64, True, 0, jnp.float32),
+    (1, 4, 4, 256, 64, False, 0, jnp.float32),
+    (2, 8, 2, 128, 128, True, 64, jnp.float32),
+    (1, 2, 1, 256, 64, True, 96, jnp.float32),
+    (1, 4, 2, 128, 64, True, 0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,H,K,S,D,causal,window,dtype", ATTN_CASES)
+def test_flash_attention_sweep(B, H, K, S, D, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, K, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, K, S, D), dtype)
+    out = fa_raw(q, k, v, causal=causal, window=window, block_q=64,
+                 block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+SSD_CASES = [
+    # (BH, S, P, N, chunk, dtype)
+    (4, 128, 64, 32, 32, jnp.float32),
+    (2, 256, 32, 64, 64, jnp.float32),
+    (6, 64, 64, 16, 16, jnp.float32),
+    (2, 128, 64, 32, 128, jnp.float32),   # single chunk
+    (2, 128, 32, 32, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("BH,S,P,N,chunk,dtype", SSD_CASES)
+def test_ssd_scan_sweep(BH, S, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (BH, S, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (BH, S))).astype(dtype)
+    A = -jnp.exp(jax.random.uniform(ks[2], (BH,), minval=-1.0, maxval=0.5))
+    Bm = (jax.random.normal(ks[3], (BH, S, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (BH, S, N)) * 0.5).astype(dtype)
+    D = jnp.ones((BH,))
+    y = ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
+    want = ref.ssd_scan_ref(x, dt, A, Bm, Cm, D)
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+NORM_CASES = [(1, 7), (3, 4096), (8, 5000), (2, 17)]
+
+
+@pytest.mark.parametrize("L,F", NORM_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_layer_sq_norms_sweep(L, F, dtype):
+    g = jax.random.normal(jax.random.PRNGKey(2), (L, F), dtype)
+    out = layer_sq_norms_2d(g, block=1024, interpret=True)
+    want = ref.layer_sq_norms_ref(g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("L,F", [(4, 64), (6, 1000), (1, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_update_sweep(L, F, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    p = jax.random.normal(ks[0], (L, F), dtype)
+    g = jax.random.normal(ks[1], (L, F), dtype)
+    mask = (jax.random.uniform(ks[2], (L,)) > 0.5).astype(jnp.float32)
+    out = masked_sgd_update_2d(p, g, mask, 0.1, block=256, interpret=True)
+    want = ref.masked_sgd_update_ref(p, g, mask, 0.1)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)
+    # masked rows unchanged exactly
+    for l in range(L):
+        if mask[l] == 0:
+            np.testing.assert_array_equal(np.asarray(out[l]), np.asarray(p[l]))
+
+
+def test_ops_layer_grad_norms_matches_core():
+    """The fused kernel equals core.masks.per_layer_sq_norms on a real tree."""
+    from repro.configs.base import RuntimeConfig, get_arch, reduced
+    from repro.core.masks import per_layer_sq_norms
+    from repro.models.model import Model
+    cfg = reduced(get_arch("tinyllama_1_1b"), n_layers=3, d_model=64)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab_size)}
+    g = jax.grad(model.loss)(params, batch)
+    want = np.asarray(per_layer_sq_norms(g, cfg))
+    got = np.asarray(ops.layer_grad_norms(g["blocks"], interpret=True))
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_ops_ssd_matches_model_path():
+    from repro.models.ssd import ssd_chunked
+    b, s, h, p, g, n = 2, 64, 4, 32, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A_log = jax.random.uniform(ks[2], (h,), minval=-1.0, maxval=1.0)
+    Bm = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    D = jnp.ones((h,))
+    y_k = ops.ssd(x, dt, A_log, Bm, Cm, D, chunk=32, interpret=True)
+    y_j, _ = ssd_chunked(x, dt, A_log, Bm, Cm, D, 32)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_j), atol=1e-4)

@@ -1,0 +1,64 @@
+"""Unit + property tests for masking vectors and Eq.(7) aggregation weights."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.masks import (aggregation_weights, chi_divergence,
+                              mask_from_indices, indices_from_mask, union_mask)
+
+
+def test_mask_roundtrip():
+    m = mask_from_indices([0, 3], 5)
+    assert m.tolist() == [1, 0, 0, 1, 0]
+    assert indices_from_mask(m) == (0, 3)
+
+
+def test_union():
+    mm = np.array([[1, 0, 0], [0, 0, 1]], np.float32)
+    assert union_mask(mm).tolist() == [1, 0, 1]
+
+
+def test_eq7_weights_exact():
+    """Hand-computed Eq. (7) example."""
+    masks = np.array([[1, 1, 0], [1, 0, 0]], np.float32)
+    sizes = np.array([10.0, 30.0])
+    W = np.asarray(aggregation_weights(masks, sizes))
+    np.testing.assert_allclose(W[:, 0], [0.25, 0.75])   # both selected l=0
+    np.testing.assert_allclose(W[:, 1], [1.0, 0.0])     # only client 0
+    np.testing.assert_allclose(W[:, 2], [0.0, 0.0])     # nobody
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 6), st.integers(0, 2 ** 30))
+def test_weights_columns_normalised(n, L, seed):
+    """Property: for every selected layer, weights over cohort sum to 1;
+    unselected layers sum to 0; weights are zero where mask is zero."""
+    rng = np.random.RandomState(seed % (2 ** 31 - 1))
+    masks = (rng.rand(n, L) > 0.4).astype(np.float32)
+    sizes = rng.randint(1, 100, n).astype(np.float32)
+    W = np.asarray(aggregation_weights(masks, sizes))
+    col = W.sum(0)
+    sel = union_mask(masks)
+    np.testing.assert_allclose(col, sel, atol=1e-5)
+    assert np.all(W[masks == 0] == 0)
+    assert np.all(W >= 0)
+
+
+def test_chi_divergence_zero_when_weights_match_alpha():
+    alpha = np.array([0.2, 0.3, 0.5], np.float32)
+    W = np.tile(alpha[:, None], (1, 4))
+    chi = np.asarray(chi_divergence(jnp.asarray(W), jnp.asarray(alpha)))
+    np.testing.assert_allclose(chi, 0.0, atol=1e-6)
+
+
+def test_chi_divergence_grows_with_partial_cohort():
+    """Leaving clients out increases χ (the paper's E_t2 driver)."""
+    alpha = np.full(4, 0.25, np.float32)
+    # full participation, equal sizes
+    W_full = np.full((4, 1), 0.25, np.float32)
+    # only two clients selected the layer
+    W_half = np.array([[0.5], [0.5], [0.0], [0.0]], np.float32)
+    chi_f = float(chi_divergence(jnp.asarray(W_full), jnp.asarray(alpha))[0])
+    chi_h = float(chi_divergence(jnp.asarray(W_half), jnp.asarray(alpha))[0])
+    assert chi_f < 1e-6 < chi_h

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+For each of the 10 assigned architectures (+ the paper's own 3): instantiate
+the REDUCED variant (≤2 layers core, d_model ≤ 512, ≤4 experts), run one
+forward/train step on CPU, assert output shapes and no NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs.base import (ASSIGNED_ARCHS, PAPER_ARCHS, RuntimeConfig,
+                                get_arch, reduced)
+from repro.models.model import Model, count_params
+
+ALL = ASSIGNED_ARCHS + PAPER_ARCHS
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_forward_and_train_step(arch):
+    cfg = reduced(get_arch(arch))
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    assert count_params(params) > 0
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S)
+
+    # forward: loss is a finite scalar
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+
+    # one SGD step: params stay finite, loss decreases on same batch
+    new_params = jax.tree.map(lambda p, g: p - 0.05 * g, params, grads)
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree.leaves(new_params)), arch
+    loss2 = model.loss(new_params, batch)
+    assert bool(jnp.isfinite(loss2))
+    assert float(loss2) < float(loss) + 1e-3, f"{arch}: no descent"
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL])
+def test_decode_step_shapes(arch):
+    cfg = reduced(get_arch(arch))
+    if cfg.task == "classification":
+        pytest.skip("classification archs have no decode path")
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    B = 2
+    cache = model.init_cache(B, 16)
+    tok = jnp.zeros((B,), jnp.int32)
+    logits, new_cache = model.decode_step(params, tok, jnp.int32(0), cache)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama_1_1b", "zamba2_7b",
+                                  "mamba2_370m", "deepseek_v2_lite_16b"])
+def test_sliding_window_variant(arch):
+    """long_500k policy: windowed decode must also work."""
+    cfg = reduced(get_arch(arch))
+    if cfg.family == "ssm":
+        pytest.skip("attention-free")
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 64, window=8)
+    tok = jnp.zeros((2,), jnp.int32)
+    logits, _ = model.decode_step(params, tok, jnp.int32(0), cache, window=8)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_exact_assigned_configs():
+    """The full configs carry the exact assigned hyper-parameters."""
+    expect = {
+        "tinyllama-1.1b": dict(n_layers=22, d_model=2048, n_heads=32,
+                               n_kv_heads=4, d_ff=5632, vocab_size=32000),
+        "grok-1-314b": dict(n_layers=64, d_model=6144, n_heads=48,
+                            n_kv_heads=8, d_ff=32768, vocab_size=131072,
+                            n_experts=8, top_k=2),
+        "smollm-360m": dict(n_layers=32, d_model=960, n_heads=15,
+                            n_kv_heads=5, d_ff=2560, vocab_size=49152),
+        "zamba2-7b": dict(n_layers=81, d_model=3584, n_heads=32,
+                          n_kv_heads=32, d_ff=14336, vocab_size=32000,
+                          ssm_state=64),
+        "codeqwen1.5-7b": dict(n_layers=32, d_model=4096, n_heads=32,
+                               n_kv_heads=32, d_ff=13440, vocab_size=92416),
+        "paligemma-3b": dict(n_layers=18, d_model=2048, n_heads=8,
+                             n_kv_heads=1, d_ff=16384, vocab_size=257216),
+        "deepseek-v2-lite-16b": dict(n_layers=27, d_model=2048, n_heads=16,
+                                     n_kv_heads=16, d_ff=1408,
+                                     vocab_size=102400, n_experts=64,
+                                     top_k=6, kv_lora_rank=512),
+        "mamba2-370m": dict(n_layers=48, d_model=1024, d_ff=0,
+                            vocab_size=50280, ssm_state=128),
+        "gemma-7b": dict(n_layers=28, d_model=3072, n_heads=16,
+                         n_kv_heads=16, d_ff=24576, vocab_size=256000,
+                         head_dim=256),
+        "whisper-medium": dict(n_layers=24, d_model=1024, n_heads=16,
+                               n_kv_heads=16, d_ff=4096, vocab_size=51865,
+                               n_enc_layers=24),
+    }
+    for name, fields in expect.items():
+        cfg = get_arch(name)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (name, k, getattr(cfg, k), v)
+
+
+def test_param_count_magnitudes():
+    """Full configs land in the advertised parameter range."""
+    import numpy as np
+    targets = {"tinyllama-1.1b": (1.0e9, 1.25e9),
+               "smollm-360m": (3.2e8, 4.1e8),
+               "mamba2-370m": (3.2e8, 4.2e8),
+               "grok-1-314b": (2.9e11, 3.4e11)}
+    for name, (lo, hi) in targets.items():
+        cfg = get_arch(name)
+        from repro.models.model import init_params
+        shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+        assert lo <= n <= hi, (name, n)

@@ -1,0 +1,67 @@
+"""Tests for the (P1) solvers."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.solver import objective, solve_icm, solve_unified
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 10), st.integers(0, 2 ** 30),
+       st.floats(0.0, 100.0))
+def test_budgets_respected(n, L, seed, lam):
+    rng = np.random.RandomState(seed % (2 ** 31 - 1))
+    G = np.abs(rng.randn(n, L)).astype(np.float64)
+    budgets = rng.randint(1, L + 1, n)
+    masks, _, _ = solve_icm(G, budgets, lam)
+    assert masks.shape == (n, L)
+    assert np.all(masks.sum(1) <= budgets + 1e-9)
+    assert np.all(masks.sum(1) >= 1)          # at least one layer each
+    assert set(np.unique(masks)) <= {0.0, 1.0}
+
+
+def test_lambda_zero_is_per_client_topk():
+    G = np.array([[5., 1., 3.], [1., 9., 2.]])
+    masks, _, _ = solve_icm(G, 1, lam=0.0)
+    np.testing.assert_array_equal(masks, [[1, 0, 0], [0, 1, 0]])
+
+
+def test_large_lambda_forces_agreement():
+    """λ→∞ must produce identical masks (equal budgets)."""
+    rng = np.random.RandomState(0)
+    G = np.abs(rng.randn(5, 8))
+    masks, _, _ = solve_icm(G, 2, lam=1e6)
+    for i in range(1, 5):
+        np.testing.assert_array_equal(masks[i], masks[0])
+    # and matches the unified solver
+    uni = solve_unified(G, 2)
+    np.testing.assert_array_equal(masks, uni)
+
+
+def test_icm_improves_over_init():
+    rng = np.random.RandomState(3)
+    G = np.abs(rng.randn(6, 10))
+    lam = 0.5
+    init = np.stack([np.eye(10, dtype=np.float32)[i % 10] for i in range(6)])
+    masks, val, iters = solve_icm(G, 1, lam, init=init)
+    assert val >= objective(G, init, lam) - 1e-9
+
+
+def test_unified_heterogeneous_budgets_nested():
+    """Unified selection with R_i ∈ {1,3}: the R=1 mask is a prefix subset."""
+    rng = np.random.RandomState(1)
+    G = np.abs(rng.randn(4, 6))
+    budgets = np.array([1, 3, 1, 3])
+    masks = solve_unified(G, budgets)
+    assert masks[0].sum() == 1 and masks[1].sum() == 3
+    assert np.all(masks[0] <= masks[1])       # nested prefixes
+    np.testing.assert_array_equal(masks[0], masks[2])
+
+
+def test_costs_knapsack():
+    """Non-uniform layer costs: budget counts parameters, not layers."""
+    G = np.array([[10.0, 10.0, 1.0]])
+    costs = np.array([4.0, 1.0, 1.0])
+    masks, _, _ = solve_icm(G, budgets=2.0, lam=0.0, costs=costs)
+    # layer 0 too expensive (cost 4 > 2); pick layers 1 then 2
+    np.testing.assert_array_equal(masks, [[0, 1, 1]])

@@ -1,0 +1,69 @@
+"""Tests for the selection strategies (§5.1 baselines + ours)."""
+import numpy as np
+import pytest
+
+from repro.core.strategies import ALL_STRATEGIES, ProbeReport, select
+
+
+def _probe(n=4, L=6, seed=0):
+    rng = np.random.RandomState(seed)
+    return ProbeReport(
+        grad_sq_norms=np.abs(rng.randn(n, L)).astype(np.float32),
+        param_sq_norms=np.abs(rng.randn(n, L)).astype(np.float32) + 1.0,
+        grad_means=rng.randn(n, L).astype(np.float32),
+        grad_vars=np.abs(rng.randn(n, L)).astype(np.float32) + 0.1)
+
+
+def test_top_bottom_positions():
+    p = _probe()
+    top = select("top", p, 2)
+    bot = select("bottom", p, 2)
+    assert np.all(top[:, -2:] == 1) and np.all(top[:, :-2] == 0)
+    assert np.all(bot[:, :2] == 1) and np.all(bot[:, 2:] == 0)
+
+
+def test_both_splits():
+    p = _probe()
+    both = select("both", p, 2)
+    assert np.all(both[:, 0] == 1) and np.all(both[:, -1] == 1)
+    assert both.sum() == 2 * p.n
+
+
+def test_full():
+    p = _probe()
+    assert select("full", p, 1).sum() == p.n * p.L
+
+
+def test_budget_respected_all_strategies():
+    p = _probe()
+    budgets = np.array([1, 2, 3, 1])
+    for s in ALL_STRATEGIES:
+        if s == "full":
+            continue
+        m = select(s, p, budgets)
+        assert np.all(m.sum(1) <= budgets), s
+
+
+def test_rgn_picks_relative_norm():
+    g = np.array([[4.0, 1.0]])      # |g| = 2, 1
+    th = np.array([[16.0, 0.25]])   # |θ| = 4, 0.5 → rgn = 0.5, 2.0
+    p = ProbeReport(grad_sq_norms=g, param_sq_norms=th)
+    m = select("rgn", p, 1)
+    np.testing.assert_array_equal(m, [[0, 1]])
+
+
+def test_snr_picks_high_signal():
+    mean = np.array([[1.0, 1.0]])
+    var = np.array([[0.1, 10.0]])
+    p = ProbeReport(grad_sq_norms=np.ones((1, 2)), grad_means=mean,
+                    grad_vars=var)
+    m = select("snr", p, 1)
+    np.testing.assert_array_equal(m, [[1, 0]])
+
+
+def test_ours_prefers_high_gradient_layers():
+    G = np.zeros((3, 5), np.float32)
+    G[:, 2] = 100.0                  # layer 2 dominates for everyone
+    p = ProbeReport(grad_sq_norms=G)
+    m = select("ours", p, 1, lam=1.0)
+    assert np.all(m[:, 2] == 1)

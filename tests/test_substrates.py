@@ -1,0 +1,136 @@
+"""Checkpointing, data pipeline, optimizers, cost model."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs.base import RuntimeConfig, get_arch, reduced
+from repro.core.costs import backward_cost_exact, backward_cost_uniform
+from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
+from repro.models.model import Model
+from repro.optim import adamw, apply_updates, cosine_schedule, sgd
+
+
+# --- checkpointing ---------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = reduced(get_arch("smollm_360m"), n_layers=2, d_model=64)
+    model = Model(cfg, RuntimeConfig(remat=False))
+    params = model.init(jax.random.PRNGKey(0))
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 3, params, extra={"round": 3})
+    save_checkpoint(d, 7, params, extra={"round": 7})
+    assert latest_step(d) == 7
+    template = jax.tree.map(jnp.zeros_like, params)
+    restored, manifest = restore_checkpoint(d, template)
+    assert manifest["extra"]["round"] == 7
+    flat_a = jax.tree.leaves(params)
+    flat_b = jax.tree.leaves(restored)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 0, {"w": jnp.ones((3, 3))})
+    with pytest.raises(AssertionError):
+        restore_checkpoint(d, {"w": jnp.ones((2, 2))})
+
+
+# --- data pipeline -----------------------------------------------------------
+
+def test_label_skew_concentration():
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=50, skew="label", dirichlet_alpha=0.1, seed=1))
+    # Dirichlet(0.1): client label distributions are strongly concentrated
+    maxes = data.client_label_p.max(axis=1)
+    assert np.median(maxes) > 0.5
+    # and the aggregate stays roughly balanced
+    agg = (data.client_label_p * data.alpha[:, None]).sum(0)
+    assert agg.max() < 0.5
+
+
+def test_feature_skew_domains_differ():
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=10, skew="feature", n_domains=3, seed=2,
+        domain_strength=0.5))
+    perms = data.domain_perm
+    assert len(perms) == 4                      # 3 domains + identity
+    assert np.array_equal(perms[-1], np.arange(len(perms[-1])))
+    assert not np.array_equal(perms[0], perms[1])
+
+
+def test_batches_deterministic_shapes():
+    data = SyntheticFederatedData(FederatedTaskConfig(n_clients=5, seed=3))
+    b = data.client_batch(2, 16)
+    assert b["tokens"].shape == (16, data.cfg.seq_len)
+    assert b["label"].shape == (16,)
+    assert b["tokens"].max() < data.cfg.vocab_size
+    stacked = data.client_batches(1, 8, 3)
+    assert stacked["tokens"].shape == (3, 8, data.cfg.seq_len)
+
+
+def test_alpha_sums_to_one():
+    data = SyntheticFederatedData(FederatedTaskConfig(n_clients=7, seed=4))
+    np.testing.assert_allclose(data.alpha.sum(), 1.0)
+
+
+# --- optimizers ----------------------------------------------------------------
+
+def _quad_min(opt, steps=200):
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(steps):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        u, state = opt.update(g, state, params)
+        params = apply_updates(params, u)
+    return float(jnp.max(jnp.abs(params["w"])))
+
+
+def test_sgd_converges_quadratic():
+    assert _quad_min(sgd(0.1)) < 1e-3
+
+
+def test_sgd_momentum_converges():
+    assert _quad_min(sgd(0.05, momentum=0.9)) < 1e-3
+
+
+def test_adamw_converges_quadratic():
+    assert _quad_min(adamw(0.1), steps=400) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, 100, warmup=10)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(100)) < 1e-6
+    assert float(lr(55)) < float(lr(20))
+
+
+# --- §4.3 cost model -------------------------------------------------------------
+
+def test_eq16_eq17_ratios():
+    L, R, tau = 24, 2, 5
+    rep = backward_cost_uniform(L, R, tau)
+    assert rep.compute_flops == pytest.approx(R * tau + L - 1)
+    assert rep.ratio_compute == pytest.approx((R * tau + L - 1) / (L * tau))
+    assert rep.ratio_transmit == pytest.approx(R / L)
+
+
+def test_selection_period_reduces_probe_cost():
+    a = backward_cost_uniform(24, 1, 5, sel_period=1)
+    b = backward_cost_uniform(24, 1, 5, sel_period=2)
+    assert b.select_flops == pytest.approx(a.select_flops / 2)
+    assert b.compute_flops < a.compute_flops
+
+
+def test_exact_cost_uses_layer_sizes():
+    layer_params = np.array([100, 200, 300])
+    mask = np.array([0, 1, 0], np.float32)
+    rep = backward_cost_exact(layer_params, mask, tau=2, bits_per_param=32)
+    assert rep.transmit_bits == 200 * 32
+    assert rep.ratio_transmit == pytest.approx(200 / 600)

@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests of the paper's system.
+
+The headline claims, validated on synthetic federated tasks:
+1. Selective fine-tuning with the proposed strategy reaches the full
+   fine-tuning neighbourhood at R≪L (Table 1 claim).
+2. The communication cost of a selective round is R/L of full (Table 3).
+3. Property (hypothesis): one FL round is *invariant* to client order and
+   scales correctly with duplicated clients.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
+from repro.core import aggregation as agg
+from repro.core.server import FLServer
+from repro.data.pretrain import pretrain
+from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
+from repro.models.model import Model, apply_layer_mask
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = reduced(get_arch("xlm_roberta_base"), n_layers=4, d_model=64)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=16, n_classes=10, vocab_size=cfg.vocab_size, seq_len=16,
+        samples_per_client=24, skew="feature", objective="classification",
+        signal=0.8, domain_strength=0.4))
+    params = pretrain(model, model.init(jax.random.PRNGKey(0)), data,
+                      steps=120, lr=3e-3)
+    return model, params, data
+
+
+def _run(model, params, data, strategy, rounds=10, budget=2, lr=0.01):
+    fl = FLConfig(n_clients=16, cohort_size=4, rounds=rounds, local_steps=2,
+                  lr=lr, batch_size=8, strategy=strategy, budget=budget,
+                  lam=1.0, seed=5)
+    server = FLServer(model, fl, data)
+    return server.run(params)
+
+
+def test_selective_tracks_full(world):
+    """'Ours' at R=2 of 4 layers stays within reach of full fine-tuning."""
+    model, params, data = world
+    _, h_ours = _run(model, params, data, "ours")
+    _, h_full = _run(model, params, data, "full")
+    assert h_ours.summary()["best_acc"] >= h_full.summary()["best_acc"] - 0.08
+
+
+def test_selective_beats_bottom(world):
+    """Gradient-informed selection beats the weakest positional baseline."""
+    model, params, data = world
+    _, h_ours = _run(model, params, data, "ours")
+    _, h_bot = _run(model, params, data, "bottom")
+    assert h_ours.summary()["best_acc"] >= h_bot.summary()["best_acc"] - 0.05
+
+
+def test_upload_is_r_over_l(world):
+    """Table 3 claim: uploaded parameters per round = (R/L)·full."""
+    model, params, data = world
+    _, h_sel = _run(model, params, data, "top", rounds=2, budget=1)
+    _, h_full = _run(model, params, data, "full", rounds=2)
+    L = model.n_selectable
+    ratio = (h_sel.summary()["uploaded_params_total"]
+             / h_full.summary()["uploaded_params_total"])
+    assert ratio == pytest.approx(1.0 / L, rel=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 20))
+def test_round_invariant_to_client_order(seed):
+    """Aggregation (Eq. 5) is permutation-invariant in the cohort."""
+    cfg = reduced(get_arch("tinyllama_1_1b"), n_layers=3, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(seed % (2 ** 31 - 1))
+    n = 3
+    batches = [{"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 16)))}
+               for _ in range(n)]
+    masks = jnp.asarray((rng.rand(n, 3) > 0.3).astype(np.float32))
+    sizes = jnp.asarray(rng.randint(1, 50, n).astype(np.float32))
+    deltas = [apply_layer_mask(jax.grad(model.loss)(params, b), masks[i], cfg)
+              for i, b in enumerate(batches)]
+    upd = agg.aggregate(deltas, masks, sizes, cfg)
+    perm = rng.permutation(n)
+    upd_p = agg.aggregate([deltas[i] for i in perm], masks[perm], sizes[perm],
+                          cfg)
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), upd, upd_p)))
+    assert err < 1e-5
+
+
+def test_duplicated_client_equals_double_weight():
+    """Eq.(7): a client listed twice == the same client with 2·d_i."""
+    cfg = reduced(get_arch("tinyllama_1_1b"), n_layers=3, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    b1 = {"tokens": jnp.asarray(np.random.RandomState(0).randint(0, 64, (2, 16)))}
+    b2 = {"tokens": jnp.asarray(np.random.RandomState(1).randint(0, 64, (2, 16)))}
+    m = jnp.ones((1, 3), jnp.float32)
+    g1 = apply_layer_mask(jax.grad(model.loss)(params, b1), m[0], cfg)
+    g2 = apply_layer_mask(jax.grad(model.loss)(params, b2), m[0], cfg)
+    dup = agg.aggregate([g1, g1, g2], jnp.ones((3, 3)), jnp.array([5., 5., 10.]), cfg)
+    wt = agg.aggregate([g1, g2], jnp.ones((2, 3)), jnp.array([10., 10.]), cfg)
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), dup, wt)))
+    assert err < 1e-5

@@ -1,0 +1,102 @@
+"""Validation of the §4.1 theory quantities (Lemma 4.6 / Theorem 4.7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RuntimeConfig, get_arch, reduced
+from repro.core import theory
+from repro.core.masks import union_mask
+from repro.models.model import Model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_arch("xlm_roberta_base"), n_layers=4, d_model=64)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    batches = []
+    for i in range(4):
+        ks = jax.random.split(jax.random.fold_in(key, i), 2)
+        batches.append({
+            "tokens": jax.random.randint(ks[0], (8, 16), 0, cfg.vocab_size),
+            "label": jax.random.randint(ks[1], (8,), 0, cfg.n_classes)})
+    alpha = np.array([0.1, 0.2, 0.3, 0.4])
+    gg = theory.global_gradient(model, params, batches, alpha)
+    cg = theory.per_client_gradients(model, params, batches)
+    return model, params, batches, alpha, gg, cg
+
+
+def test_e_t1_zero_when_all_selected(setup):
+    model, *_, gg, _ = setup[0], *setup[1:5], setup[5]
+    model, params, batches, alpha, gg, cg = setup
+    assert theory.e_t1(model, gg, np.ones(4, np.float32)) == 0.0
+
+
+def test_e_t1_monotone_in_selection(setup):
+    model, params, batches, alpha, gg, cg = setup
+    full = theory.e_t1(model, gg, np.zeros(4, np.float32))
+    partial = theory.e_t1(model, gg, np.array([1, 0, 0, 0], np.float32))
+    assert full >= partial >= 0.0
+
+
+def test_e_t2_zero_for_full_cohort_uniform(setup):
+    """All clients, all layers, weights == alpha ⇒ χ = 0 ⇒ E_t2 = 0."""
+    model, params, batches, alpha, gg, cg = setup
+    kappa = theory.kappa_per_layer(model, gg, cg)
+    masks = np.ones((4, 4), np.float32)
+    sizes = alpha * 100
+    val = theory.e_t2(masks, sizes, kappa)
+    assert val < 1e-6
+
+
+def test_e_t2_positive_for_partial_cohort(setup):
+    model, params, batches, alpha, gg, cg = setup
+    kappa = theory.kappa_per_layer(model, gg, cg)
+    masks = np.array([[1, 1, 0, 0], [1, 0, 1, 0]], np.float32)
+    sizes = np.array([10.0, 20.0])
+    val = theory.e_t2(masks, sizes, kappa,
+                      population_alpha=alpha, cohort_idx=np.array([0, 1]))
+    assert val > 0.0
+
+
+def test_kappa_nonnegative_and_bounding(setup):
+    """κ_l upper-bounds each client's layer-gradient deviation."""
+    model, params, batches, alpha, gg, cg = setup
+    from repro.core.masks import per_layer_sq_norms
+    kappa = theory.kappa_per_layer(model, gg, cg)
+    assert np.all(kappa >= 0)
+    for g_i in cg:
+        diff = jax.tree.map(lambda a, b: a - b.astype(jnp.float32), gg, g_i)
+        sq = np.asarray(per_layer_sq_norms(diff, model.cfg))
+        assert np.all(np.sqrt(sq) <= kappa + 1e-5)
+
+
+def test_theorem_rhs_structure():
+    """Error floor: grows with E-terms, decays with T in the other terms."""
+    base = dict(f0=2.0, f_star=0.5, eta=0.01, gamma=1.0, sigma_sq=0.1)
+    r_small = theory.theorem_4_7_rhs(**base, T=100, e1_sum=0.0, e2_sum=0.0)
+    r_big_e = theory.theorem_4_7_rhs(**base, T=100, e1_sum=50.0, e2_sum=50.0)
+    assert r_big_e > r_small
+    r_long = theory.theorem_4_7_rhs(**base, T=10000, e1_sum=0.0, e2_sum=0.0)
+    assert r_long < r_small
+
+
+def test_error_floor_tracks_selection_quality(setup):
+    """The paper's core claim: selecting high-gradient layers (ours) gives a
+    smaller E_t1+E_t2 than selecting low-gradient layers."""
+    model, params, batches, alpha, gg, cg = setup
+    from repro.core.masks import per_layer_sq_norms
+    sq = np.asarray(per_layer_sq_norms(gg, model.cfg))
+    best, worst = np.argmax(sq), np.argmin(sq)
+    kappa = theory.kappa_per_layer(model, gg, cg)
+    sizes = alpha * 100
+
+    def floor(layer):
+        masks = np.zeros((4, 4), np.float32)
+        masks[:, layer] = 1
+        return (theory.e_t1(model, gg, union_mask(masks))
+                + theory.e_t2(masks, sizes, kappa))
+
+    assert floor(best) < floor(worst)
