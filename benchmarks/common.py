@@ -84,14 +84,18 @@ def build_world(scn: Scenario, seed: int = 0):
     return _cache[key]
 
 
+ENGINE = os.environ.get("BENCH_ENGINE", "vectorized")
+
+
 def run_fl(scn: Scenario, strategy: str, *, budget=1, budgets=None,
-           rounds: int = ROUNDS, seed: int = 0) -> History:
+           rounds: int = ROUNDS, seed: int = 0,
+           engine: str = ENGINE) -> History:
     model, params, data = build_world(scn, seed)
     fl = FLConfig(n_clients=N_CLIENTS, cohort_size=COHORT, rounds=rounds,
                   local_steps=scn.local_steps, lr=scn.lr,
                   batch_size=scn.batch_size, strategy=strategy,
                   budget=budget, budgets=budgets, lam=scn.lam, seed=seed)
-    server = FLServer(model, fl, data)
+    server = FLServer(model, fl, data, engine=engine)
     _, hist = server.run(params)
     return hist
 

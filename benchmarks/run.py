@@ -81,6 +81,80 @@ def micro_benchmarks():
     us2 = (time.perf_counter() - t0) / 2 * 1e6
     print(f"fl_round_sim_cifar_warm,{us2:.1f},-")
 
+    # round engine: sequential per-client loop vs the fused vmap round step
+    round_engine_benchmarks()
+
+
+def round_engine_benchmarks():
+    """Warm µs per cohort *engine step* at cohort_size ∈ {4, 8}.
+
+    Times exactly what the engine switch changes — the probe + τ-step local
+    updates + Eq.(5)-(7) aggregation + apply — on pre-drawn batches, in the
+    FL-realistic small-microbatch regime (synthetic data generation and test
+    evaluation are identical across engines and excluded).  The vectorized
+    row's derived column reports the speedup over the sequential oracle at
+    the same cohort size.
+    """
+    from repro.configs.base import (FLConfig, RuntimeConfig, get_arch,
+                                    reduced)
+    from repro.core import aggregation as agg
+    from repro.core.client import Client
+    from repro.data.synthetic import (FederatedTaskConfig,
+                                      SyntheticFederatedData)
+    from repro.models.model import Model
+
+    cfg = reduced(get_arch("xlm_roberta_base"), n_layers=4, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=20, n_classes=10, vocab_size=cfg.vocab_size, seq_len=8,
+        samples_per_client=16, skew="label", objective="classification"))
+    fl = FLConfig(n_clients=20, local_steps=2, lr=0.01, batch_size=4,
+                  strategy="ours", budget=1)
+    reps = 1 if FAST else 5
+    for cohort_n in (4, 8):
+        client = Client(model)       # fresh jit caches per cohort shape
+        cohort = np.arange(cohort_n)
+        masks = np.zeros((cohort_n, model.n_selectable), np.float32)
+        masks[:, 1] = 1.0
+        sizes = data.sizes[cohort]
+        batches = data.cohort_batches(cohort, fl.batch_size, fl.local_steps)
+        probe_b = data.cohort_batches(cohort, fl.batch_size,
+                                      fl.selection_batches)
+
+        def vec_step():
+            client.probe_cohort(params, probe_b)
+            _, losses = client.cohort_update(params, batches, masks, sizes,
+                                             fl.lr)
+            return losses
+
+        def seq_step():
+            for i in range(cohort_n):
+                client.probe(params, jax.tree.map(lambda x: x[i, 0], probe_b))
+            outs = [client.local_update(params,
+                                        jax.tree.map(lambda x, i=i: x[i],
+                                                     batches),
+                                        masks[i], fl.lr)
+                    for i in range(cohort_n)]
+            update = agg.aggregate([o[0] for o in outs], masks, sizes, cfg)
+            return agg.apply_update(params, update, fl.lr)
+
+        seq_us = None
+        for engine, step in (("sequential", seq_step),
+                             ("vectorized", vec_step)):
+            step()                               # warmup: jit compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = step()
+            jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) / reps * 1e6
+            derived = "-"
+            if engine == "sequential":
+                seq_us = us
+            else:
+                derived = f"{seq_us / us:.2f}x_vs_seq"
+            print(f"round_engine_{engine}_c{cohort_n},{us:.1f},{derived}")
+
 
 def main() -> None:
     micro_benchmarks()

@@ -30,10 +30,13 @@ def main():
                       steps=150, lr=3e-3, verbose=True)
 
     # 4. Algorithm 1 with the paper's strategy: each client fine-tunes its
-    #    best R=1 layer, selections regulated by λ.
+    #    best R=1 layer, selections regulated by λ.  The vectorized engine
+    #    runs the whole cohort as one fused XLA program per round;
+    #    engine="sequential" is the paper-literal per-client oracle (both
+    #    produce identical masks and params — tests/test_round_engine.py).
     fl = FLConfig(n_clients=20, cohort_size=5, rounds=10, local_steps=2,
                   lr=0.01, batch_size=16, strategy="ours", budget=1, lam=1.0)
-    server = FLServer(model, fl, data)
+    server = FLServer(model, fl, data, engine="vectorized")
     params, hist = server.run(params, verbose=True)
 
     print("\nsummary:", hist.summary())

@@ -7,9 +7,16 @@ sample sizes, form the global update
     θ^{t+1} = θ^t − η Δ^t .
 
 The per-layer weights w_{i,l} (Eq. 7) renormalise over exactly the clients
-that selected layer l.  This module is the *simulator* path (explicit
-per-client pytrees); the distributed path fuses the same weighting into a
-single backward pass via gradient scaling (sharding/fl_step.py).
+that selected layer l.  Two simulator paths compute the same sum:
+
+* :func:`aggregate` — the sequential oracle: explicit per-client pytrees,
+  one scale-and-add per cohort member (paper-literal, easy to audit).
+* :func:`aggregate_stacked` — the vectorized engine's path: one einsum
+  contraction over the stacked (n, ...) delta pytree, traceable inside a
+  single jitted round step (core/client.py ``cohort_update``).
+
+The distributed path fuses the same weighting into a single backward pass
+via gradient scaling (sharding/fl_step.py).
 """
 from __future__ import annotations
 
@@ -19,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.masks import aggregation_weights
-from repro.models.model import layer_layout, split_mask
+from repro.models.model import layer_layout, split_mask, split_mask_matrix
 
 Array = jax.Array
 PyTree = Any
@@ -55,6 +62,33 @@ def aggregate(deltas: Sequence[PyTree], mask_matrix: Array, sizes: Array,
         scaled = scale_by_layer(d, W[i], cfg)
         total = scaled if total is None else jax.tree.map(jnp.add, total, scaled)
     return total
+
+
+def aggregate_stacked(deltas: PyTree, weights: Array, cfg) -> PyTree:
+    """Eq. (5) over a *stacked* cohort delta pytree (leaves carry a leading
+    (n,) client axis, as produced by ``jax.vmap`` of the local update).
+
+    weights: the (n, L) Eq.(7) matrix from :func:`aggregation_weights`.
+    Returns the unstacked global update; frozen groups (embed/head/norms)
+    are zeroed, matching :func:`aggregate`.
+    """
+    parts = split_mask_matrix(weights, cfg)                  # path -> (n, c)
+    out = {}
+    for key, sub in deltas.items():
+        if key in parts:
+            w = parts[key]
+            if key == "shared_attn":   # unstacked single block: (n,) weight
+                out[key] = jax.tree.map(
+                    lambda x: jnp.einsum("n,n...->...", w[:, 0],
+                                         x.astype(jnp.float32)), sub)
+            else:
+                out[key] = jax.tree.map(
+                    lambda x: jnp.einsum("nc,nc...->c...", w,
+                                         x.astype(jnp.float32)), sub)
+        else:
+            out[key] = jax.tree.map(
+                lambda x: jnp.zeros(x.shape[1:], jnp.float32), sub)
+    return out
 
 
 def apply_update(params: PyTree, update: PyTree, lr: float) -> PyTree:

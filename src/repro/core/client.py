@@ -2,6 +2,16 @@
 
 Everything is jit-compiled once per architecture and reused across rounds
 and clients — masks, batches and learning rate are runtime arrays.
+
+Two execution granularities share the same per-client math:
+
+* per-client: :meth:`Client.local_update` / :meth:`Client.probe` — one jit
+  call per cohort member (the sequential oracle).
+* per-cohort: :meth:`Client.cohort_update` / :meth:`Client.probe_cohort` —
+  the vectorized engine: ``jax.vmap`` over the stacked cohort axis, with the
+  Eq.(5)-(7) weighted aggregation and Eq.(6) apply fused into the same XLA
+  program, so one round's hot path is a single dispatch (the single-host
+  analogue of the mesh step in sharding/fl_step.py).
 """
 from __future__ import annotations
 
@@ -28,6 +38,8 @@ class Client:
         self._local_update = jax.jit(self._local_update_impl)
         self._probe = jax.jit(self._probe_impl)
         self._eval = jax.jit(self._eval_impl)
+        self._cohort_update = jax.jit(self._cohort_update_impl)
+        self._probe_cohort = jax.jit(self._probe_cohort_impl)
 
     # -- Eq. (3)-(4): τ masked SGD steps, return accumulated update ---------
     def _local_update_impl(self, params: PyTree, batches: PyTree,
@@ -53,6 +65,36 @@ class Client:
                                          jnp.asarray(lr, jnp.float32))
         return delta, float(loss)
 
+    # -- vectorized cohort round: vmap(τ-step scan) + fused Eq.(5)-(7) ------
+    def _cohort_update_impl(self, params: PyTree, batches: PyTree,
+                            masks: Array, sizes: Array, lr: Array):
+        from repro.core import aggregation as agg
+
+        def one(b, m):
+            return self._local_update_impl(params, b, m, lr)
+
+        # deltas: stacked (n, ...) pytree; losses: (n,)
+        deltas, losses = jax.vmap(one)(batches, masks)
+        weights = M.aggregation_weights(masks, sizes)        # (n, L), Eq. 7
+        update = agg.aggregate_stacked(deltas, weights, self.cfg)
+        new_params = agg.apply_update(params, update, lr)
+        return new_params, losses
+
+    def cohort_update(self, params, batches, masks, sizes,
+                      lr) -> tuple[PyTree, np.ndarray]:
+        """One fused round step for the whole cohort.
+
+        batches: pytree with leading (cohort, τ) axes (``cohort_batches``);
+        masks: (cohort, L); sizes: (cohort,) client dataset sizes d_i.
+        Returns (new global params, per-client mean local losses).  Matches
+        the sequential local_update → aggregate → apply_update composition
+        within fp tolerance (see tests/test_round_engine.py).
+        """
+        new_params, losses = self._cohort_update(
+            params, batches, jnp.asarray(masks, jnp.float32),
+            jnp.asarray(sizes, jnp.float32), jnp.asarray(lr, jnp.float32))
+        return new_params, np.asarray(losses)
+
     # -- selection probe: layer-wise gradient stats on one batch ------------
     def _probe_impl(self, params: PyTree, batch: PyTree):
         g = jax.grad(self.model.loss)(params, batch)
@@ -62,6 +104,26 @@ class Client:
 
     def probe(self, params, batch) -> dict[str, np.ndarray]:
         sq, mean, var, p_sq = self._probe(params, batch)
+        return {"grad_sq_norms": np.asarray(sq), "grad_means": np.asarray(mean),
+                "grad_vars": np.asarray(var), "param_sq_norms": np.asarray(p_sq)}
+
+    def _probe_cohort_impl(self, params: PyTree, batches: PyTree):
+        def one_client(cb):
+            sq, mean, var, p_sq = jax.vmap(
+                lambda b: self._probe_impl(params, b))(cb)
+            # mean over the selection_batches axis == the sequential
+            # accumulate-then-divide in FLServer._probe_cohort
+            return sq.mean(0), mean.mean(0), var.mean(0), p_sq.mean(0)
+
+        return jax.vmap(one_client)(batches)
+
+    def probe_cohort(self, params, batches) -> dict[str, np.ndarray]:
+        """Batched probe: one vmapped grad+stats call over the whole cohort.
+
+        batches: pytree with leading (cohort, selection_batches) axes.
+        Returns (cohort, L) stat arrays, same keys as :meth:`probe`.
+        """
+        sq, mean, var, p_sq = self._probe_cohort(params, batches)
         return {"grad_sq_norms": np.asarray(sq), "grad_means": np.asarray(mean),
                 "grad_vars": np.asarray(var), "param_sq_norms": np.asarray(p_sq)}
 

@@ -157,6 +157,17 @@ class SyntheticFederatedData:
         bs = [self.client_batch(i, batch_size) for _ in range(n)]
         return {k: np.stack([b[k] for b in bs]) for k in bs[0]}
 
+    def cohort_batches(self, cohort, batch_size: int, n: int) -> dict:
+        """Stacked batches for a whole cohort: leaves (len(cohort), n, ...).
+
+        Draws are identical to calling :meth:`client_batches` per cohort
+        member in order (each client owns its RNG stream), so the vectorized
+        and sequential engines consume the same data stream — the basis of
+        the engine-parity guarantee (tests/test_round_engine.py).
+        """
+        per = [self.client_batches(int(i), batch_size, n) for i in cohort]
+        return {k: np.stack([b[k] for b in per]) for k in per[0]}
+
     def pretrain_batch(self, batch_size: int) -> dict:
         """Balanced, identity-domain samples — the 'pretraining corpus'."""
         cfg = self.cfg

@@ -69,6 +69,19 @@ def split_mask(mask: Array, cfg: ArchConfig) -> dict[str, Array]:
     return out
 
 
+def split_mask_matrix(mask_matrix: Array, cfg: ArchConfig) -> dict[str, Array]:
+    """Split an (n, L) cohort mask/weight matrix into (n, count) segments.
+
+    Column-axis analogue of :func:`split_mask`, used by the vectorized
+    cohort engine to fuse Eq.(7) weighting over stacked delta pytrees.
+    """
+    out, off = {}, 0
+    for seg in layer_layout(cfg):
+        out[seg.path] = mask_matrix[:, off:off + seg.count]
+        off += seg.count
+    return out
+
+
 def apply_layer_mask(tree: PyTree, mask: Array, cfg: ArchConfig,
                      frozen_zero: bool = True) -> PyTree:
     """Multiply per-layer subtrees of ``tree`` (grads/updates) by the mask.

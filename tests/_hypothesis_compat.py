@@ -1,0 +1,82 @@
+"""Fallback mini property-test shim used when `hypothesis` is absent.
+
+Tier-1 must collect and run without optional dependencies, so the property
+tests import hypothesis through this module::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+
+The shim covers exactly the strategy surface this suite uses (``integers``,
+``floats``) and runs each ``@given`` test on a deterministic sample: the
+bound corners first, then fixed pseudo-random draws.  It does no shrinking
+and no coverage-guided search — install the real `hypothesis`
+(requirements-dev.txt) for that.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+# Cap fallback example counts: smoke-level determinism, not exploration.
+_MAX_FALLBACK_EXAMPLES = 16
+
+
+class _Strategy:
+    def __init__(self, lo, hi, is_float: bool):
+        self.lo, self.hi, self.is_float = lo, hi, is_float
+
+    def example(self, i: int, rng: np.random.RandomState):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        if self.is_float:
+            return float(rng.uniform(self.lo, self.hi))
+        # randint's exclusive hi overflows int64 for bounds like 2**63-1;
+        # sample in float space and round into range instead
+        return int(self.lo + rng.rand() * (self.hi - self.lo))
+
+
+class st:
+    """Namespace mirroring ``hypothesis.strategies`` for the used subset."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(min_value, max_value, is_float=False)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_) -> _Strategy:
+        return _Strategy(float(min_value), float(max_value), is_float=True)
+
+
+def settings(*, max_examples: int = 12, deadline=None, **_):
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_compat_max_examples",
+                        getattr(fn, "_compat_max_examples", 12))
+            n = min(n, _MAX_FALLBACK_EXAMPLES)
+            rng = np.random.RandomState(0)
+            for i in range(n):
+                drawn = [s.example(i, rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+
+        # hide the original signature: the drawn parameters must not look
+        # like pytest fixtures (only non-strategy leading params remain)
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[:len(params) - len(strategies)]
+        wrapper.__signature__ = inspect.Signature(keep)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

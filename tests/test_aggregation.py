@@ -49,6 +49,60 @@ def test_aggregate_weighted_mean(model_and_params):
     np.testing.assert_allclose(np.asarray(b[2]), 0.0)                  # nobody
 
 
+def test_weights_layer_selected_by_none():
+    """Eq.(7) invariant: an unselected layer yields a zero column, never NaN."""
+    masks = np.array([[1, 0, 1], [1, 0, 0]], np.float32)
+    sizes = np.array([7.0, 13.0])
+    W = np.asarray(aggregation_weights(masks, sizes))
+    assert np.all(np.isfinite(W))
+    np.testing.assert_array_equal(W[:, 1], 0.0)
+
+
+def test_weights_single_selector_gets_full_weight():
+    """Eq.(7) invariant: a layer selected by exactly one client gets w=1
+    for that client, regardless of its relative dataset size."""
+    masks = np.array([[0, 1], [1, 1], [0, 1]], np.float32)
+    sizes = np.array([1.0, 99.0, 5.0])
+    W = np.asarray(aggregation_weights(masks, sizes))
+    np.testing.assert_allclose(W[:, 0], [0.0, 1.0, 0.0])
+
+
+def test_weights_renormalize_over_selectors():
+    """Eq.(7) invariant: over the selectors of each layer, weights are
+    size-proportional and sum to 1."""
+    rng = np.random.RandomState(0)
+    masks = (rng.rand(5, 6) > 0.4).astype(np.float32)
+    masks[0] = 1.0                                   # every layer selected
+    sizes = rng.randint(1, 100, 5).astype(np.float32)
+    W = np.asarray(aggregation_weights(masks, sizes))
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-6)
+    for l in range(6):
+        sel = masks[:, l] > 0
+        expect = sizes * masks[:, l] / (sizes * masks[:, l]).sum()
+        np.testing.assert_allclose(W[sel, l], expect[sel], atol=1e-6)
+
+
+def test_aggregate_stacked_matches_sequential(model_and_params):
+    """The vectorized einsum path (Eq. 5 over a stacked pytree) equals the
+    per-client scale-and-add oracle."""
+    model, params = model_and_params
+    cfg = model.cfg
+    rng = np.random.RandomState(0)
+    n = 3
+    deltas = [jax.tree.map(
+        lambda x: jnp.asarray(rng.randn(*x.shape), jnp.float32), params)
+        for _ in range(n)]
+    masks = jnp.asarray(np.array([[1, 1, 0], [1, 0, 1], [0, 0, 1]], np.float32))
+    sizes = jnp.asarray([4.0, 12.0, 9.0])
+    seq = agg.aggregate(deltas, masks, sizes, cfg)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+    W = aggregation_weights(masks, sizes)
+    vec = agg.aggregate_stacked(stacked, W, cfg)
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), seq, vec)))
+    assert err < 1e-5
+
+
 def test_apply_update_direction(model_and_params):
     model, params = model_and_params
     upd = jax.tree.map(jnp.ones_like, params)

@@ -2,7 +2,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # tier-1 must run without optional deps
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.masks import (aggregation_weights, chi_divergence,
                               mask_from_indices, indices_from_mask, union_mask)

@@ -1,7 +1,11 @@
 """Tests for the (P1) solvers."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # tier-1 must run without optional deps
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.solver import objective, solve_icm, solve_unified
 

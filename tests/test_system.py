@@ -11,7 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # tier-1 must run without optional deps
+    from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
 from repro.core import aggregation as agg
