@@ -85,19 +85,28 @@ def build_world(scn: Scenario, seed: int = 0):
 
 
 ENGINE = os.environ.get("BENCH_ENGINE", "vectorized")
+# BENCH_PIPELINE=0 disables the streaming round pipeline (same results,
+# synchronous stage execution) — for A/B timing.
+PIPELINE = os.environ.get("BENCH_PIPELINE", "1") != "0"
 
 
 def run_fl(scn: Scenario, strategy: str, *, budget=1, budgets=None,
            rounds: int = ROUNDS, seed: int = 0,
-           engine: str = ENGINE) -> History:
+           engine: str = ENGINE, pipeline: bool = PIPELINE) -> History:
     model, params, data = build_world(scn, seed)
     fl = FLConfig(n_clients=N_CLIENTS, cohort_size=COHORT, rounds=rounds,
                   local_steps=scn.local_steps, lr=scn.lr,
                   batch_size=scn.batch_size, strategy=strategy,
                   budget=budget, budgets=budgets, lam=scn.lam, seed=seed)
-    server = FLServer(model, fl, data, engine=engine)
+    server = FLServer(model, fl, data, engine=engine, pipeline=pipeline)
     _, hist = server.run(params)
     return hist
+
+
+def save_history(name: str, hist: History, **extra):
+    """Persist a run as JSON (no pickling) — benchmarks/report.py renders
+    any experiments/bench/*.json with a 'records' key as an FL-run row."""
+    save_result(name, dict(hist.to_json(), **extra))
 
 
 def half_normal_budgets(n: int, lo: int = 1, hi: int = 4,

@@ -1,0 +1,57 @@
+"""CI micro-benchmark gate: round_engine + full_round with budget asserts.
+
+    PYTHONPATH=src python -m benchmarks.micro_ci
+
+Runs the two engine micro-benchmarks, records them to
+``experiments/bench/BENCH_round_engine.json`` and
+``experiments/bench/BENCH_full_round.json`` (uploaded as a CI artifact),
+and enforces the wall-clock budget: the vectorized engine step must not be
+slower than the sequential oracle at any cohort size, and the streaming
+pipeline's full round (sampling included) must not be slower than the
+pre-pipeline legacy path.  Exits non-zero on a budget violation.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks.common import save_result
+    from benchmarks.run import full_round_benchmarks, round_engine_benchmarks
+
+    print("name,us_per_call,derived")
+    engine_rows = round_engine_benchmarks()
+    save_result("BENCH_round_engine", {"rows": engine_rows})
+    full = full_round_benchmarks()
+    save_result("BENCH_full_round", full)
+
+    failures = []
+    by_cohort: dict = {}
+    for row in engine_rows:
+        by_cohort.setdefault(row["cohort"], {})[row["engine"]] = row
+    for cohort, pair in sorted(by_cohort.items()):
+        seq, vec = pair["sequential"], pair["vectorized"]
+        if vec["us_per_call"] > seq["us_per_call"]:
+            failures.append(
+                f"round_engine c{cohort}: vectorized {vec['us_per_call']:.0f}us"
+                f" > sequential {seq['us_per_call']:.0f}us")
+    if full["vectorized_us_per_round"] > full["legacy_us_per_round"]:
+        failures.append(
+            f"full_round: vectorized {full['vectorized_us_per_round']:.0f}us"
+            f" > legacy {full['legacy_us_per_round']:.0f}us")
+
+    print(f"full_round speedup over pre-pipeline path: "
+          f"{full['speedup']:.2f}x")
+    if failures:
+        for f in failures:
+            print(f"BUDGET VIOLATION: {f}", file=sys.stderr)
+        sys.exit(1)
+    print("micro-benchmark budget: OK (vectorized <= sequential)")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,8 @@ from collections import defaultdict
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "bench")
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
 
@@ -73,6 +75,32 @@ def fmt_dryrun_summary(rows: dict) -> str:
     return "\n".join(out)
 
 
+def fmt_fl_runs() -> str:
+    """FL-run table from History.to_json() files (no pickling needed)."""
+    out = ["### FL runs",
+           "",
+           "| run | rounds | final_acc | best_acc | uploaded params |",
+           "|---|---|---|---|---|"]
+    found = False
+    for path in sorted(glob.glob(os.path.join(BENCH_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if "records" not in r:
+            continue
+        found = True
+        s = r["summary"]
+        name = os.path.splitext(os.path.basename(path))[0]
+        final = s["final_acc"]
+        best = s["best_acc"]
+        out.append(f"| {name} | {s['rounds']} "
+                   f"| {final if final is None else f'{final:.3f}'} "
+                   f"| {best if best is None else f'{best:.3f}'} "
+                   f"| {s['uploaded_params_total']} |")
+    if not found:
+        out.append("| (no saved runs) | - | - | - | - |")
+    return "\n".join(out)
+
+
 def main():
     rows = load()
     print("## §Dry-run\n")
@@ -82,6 +110,8 @@ def main():
         print(fmt_table(rows, mesh, "base"))
         print()
     print(fmt_table(rows, "16x16", "opt"))
+    print("\n## §FL runs\n")
+    print(fmt_fl_runs())
 
 
 if __name__ == "__main__":

@@ -83,9 +83,12 @@ def micro_benchmarks():
 
     # round engine: sequential per-client loop vs the fused vmap round step
     round_engine_benchmarks()
+    # full round including host-side sampling: pre-PR scalar path vs the
+    # vectorized sampler + streaming pipeline
+    full_round_benchmarks()
 
 
-def round_engine_benchmarks():
+def round_engine_benchmarks() -> list[dict]:
     """Warm µs per cohort *engine step* at cohort_size ∈ {4, 8}.
 
     Times exactly what the engine switch changes — the probe + τ-step local
@@ -93,7 +96,7 @@ def round_engine_benchmarks():
     FL-realistic small-microbatch regime (synthetic data generation and test
     evaluation are identical across engines and excluded).  The vectorized
     row's derived column reports the speedup over the sequential oracle at
-    the same cohort size.
+    the same cohort size.  Returns the rows for BENCH_*.json recording.
     """
     from repro.configs.base import (FLConfig, RuntimeConfig, get_arch,
                                     reduced)
@@ -112,8 +115,10 @@ def round_engine_benchmarks():
     fl = FLConfig(n_clients=20, local_steps=2, lr=0.01, batch_size=4,
                   strategy="ours", budget=1)
     reps = 1 if FAST else 5
+    rows: list[dict] = []
     for cohort_n in (4, 8):
-        client = Client(model)       # fresh jit caches per cohort shape
+        client = Client(model)       # shared jit suite (module-level cache);
+                                     # per-shape compiles handled by warmup
         cohort = np.arange(cohort_n)
         masks = np.zeros((cohort_n, model.n_selectable), np.float32)
         masks[:, 1] = 1.0
@@ -154,6 +159,62 @@ def round_engine_benchmarks():
             else:
                 derived = f"{seq_us / us:.2f}x_vs_seq"
             print(f"round_engine_{engine}_c{cohort_n},{us:.1f},{derived}")
+            rows.append({"name": f"round_engine_{engine}_c{cohort_n}",
+                         "engine": engine, "cohort": cohort_n,
+                         "us_per_call": us, "derived": derived})
+    return rows
+
+
+def full_round_benchmarks(cohort_n: int = 8, rounds: int = 4) -> dict:
+    """End-to-end warm µs per *full round* — sampling included.
+
+    Compares the pre-PR host path (legacy per-sample token loops + per-round
+    test-set resampling, no prefetch) against the streaming pipeline
+    (vectorized sampler, construction-time test set, double-buffered
+    prefetch + fused probe/update).  The device math is identical in both
+    rows; the delta is pure host-side sampling + scheduling.  The config is
+    sampling-bound (short sequences, wide vocab, large held-out set — the
+    regime where ROADMAP observed the per-sample loops dominating): XLA:CPU
+    per-program overhead otherwise hides the host path entirely.  Returns a
+    dict suitable for BENCH_full_round.json.
+    """
+    from dataclasses import replace
+
+    from repro.configs.base import (FLConfig, RuntimeConfig, get_arch,
+                                    reduced)
+    from repro.core.server import FLServer
+    from repro.data.synthetic import (FederatedTaskConfig,
+                                      SyntheticFederatedData)
+    from repro.models.model import Model
+
+    cfg = replace(reduced(get_arch("xlm_roberta_base"), n_layers=2,
+                          d_model=16), vocab_size=4096)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=4))
+    params = model.init(jax.random.PRNGKey(0))
+    task = FederatedTaskConfig(
+        n_clients=20, n_classes=10, vocab_size=cfg.vocab_size, seq_len=4,
+        samples_per_client=16, skew="label", objective="classification",
+        test_samples=4096)
+    fl = FLConfig(n_clients=20, cohort_size=cohort_n, local_steps=2,
+                  lr=0.01, batch_size=16, strategy="ours", budget=1)
+    rounds = 1 if FAST else rounds
+    out = {"cohort": cohort_n, "rounds_timed": rounds}
+    for mode in ("legacy", "vectorized"):
+        data = SyntheticFederatedData(task)
+        data.legacy_sampling = mode == "legacy"
+        server = FLServer(model, fl, data, pipeline=mode != "legacy")
+        # warmup: 2 rounds so the fused probe+update program (used when a
+        # next round exists) compiles outside the timed region
+        server.run(params, rounds=2)
+        t0 = time.perf_counter()
+        server.run(params, rounds=rounds)        # run() syncs on finalize
+        us = (time.perf_counter() - t0) / rounds * 1e6
+        out[f"{mode}_us_per_round"] = us
+        print(f"full_round_{mode}_c{cohort_n},{us:.1f},"
+              + ("-" if mode == "legacy" else
+                 f"{out['legacy_us_per_round'] / us:.2f}x_vs_legacy"))
+    out["speedup"] = out["legacy_us_per_round"] / out["vectorized_us_per_round"]
+    return out
 
 
 def main() -> None:

@@ -54,6 +54,8 @@ def main():
         fl = FLConfig(n_clients=N, cohort_size=4, rounds=12, local_steps=2,
                       lr=0.01, batch_size=16, strategy=strategy,
                       budgets=budgets, lam=1.0)
+        # each server shares the module-level jit suite — the 2nd..4th
+        # construction compiles nothing (see the cache stats line below)
         server = FLServer(model, fl, data)
         new_params, hist = server.run(params)
         # theory terms for this strategy's LAST-round selection
@@ -65,6 +67,9 @@ def main():
         print(f"{strategy:7s}: best_acc={s['best_acc']:.3f} "
               f"final={s['final_acc']:.3f}  E_t1={e1:.4f} E_t2={e2:.4f} "
               f"(error floor ∝ E_t1+E_t2 = {e1 + e2:.4f})")
+
+    from repro.core.client import jit_cache_stats
+    print("jit suite cache:", jit_cache_stats())
 
 
 if __name__ == "__main__":

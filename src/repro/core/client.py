@@ -12,10 +12,22 @@ Two execution granularities share the same per-client math:
   Eq.(5)-(7) weighted aggregation and Eq.(6) apply fused into the same XLA
   program, so one round's hot path is a single dispatch (the single-host
   analogue of the mesh step in sharding/fl_step.py).
+* fused probe+update: :meth:`Client.probe_update_cohort` — one program that
+  runs the cohort update *and* the next round's selection probe on the
+  updated params; the streaming round pipeline (core/server.py) uses it
+  when every round re-selects (``selection_period == 1``).
+
+Jit caches are hoisted out of ``Client`` instances into a module-level
+cache keyed on ``(ArchConfig, RuntimeConfig)`` (both frozen/hashable), so
+benchmark sweeps and multi-server runs that rebuild ``FLServer``/``Client``
+for the same architecture share compiled programs instead of recompiling.
+Static shapes and τ are handled by jax's own per-function cache, which the
+shared callables make global.  Models with a custom ``shard`` callable
+bypass the cache (their lowering differs).  ``jit_cache_stats()`` exposes
+hit/miss counters for tests and benchmarks.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -29,17 +41,67 @@ Array = jax.Array
 PyTree = Any
 
 
+# -- module-level jit suite cache -------------------------------------------
+_JIT_CACHE: dict = {}
+_JIT_STATS = {"hits": 0, "misses": 0, "uncached": 0}
+
+_SUITE_NAMES = ("local_update", "probe", "eval", "cohort_update",
+                "probe_cohort", "probe_update_cohort")
+
+
+def jit_cache_stats() -> dict:
+    """Hit/miss counters + entry count for the shared jit suite cache."""
+    return dict(_JIT_STATS, entries=len(_JIT_CACHE))
+
+
+def clear_jit_cache() -> None:
+    _JIT_CACHE.clear()
+    for k in _JIT_STATS:
+        _JIT_STATS[k] = 0
+
+
+# name ↔ position mapping for the 4-tuple every probe impl returns
+# (sq, mean, var, p_sq) — the single source of truth for stat dicts
+def probe_stats_dict(stats) -> dict[str, np.ndarray]:
+    sq, mean, var, p_sq = stats
+    return {"grad_sq_norms": np.asarray(sq), "grad_means": np.asarray(mean),
+            "grad_vars": np.asarray(var), "param_sq_norms": np.asarray(p_sq)}
+
+
 class Client:
     """Stateless executor for local training; data is passed per call."""
 
     def __init__(self, model: Model):
         self.model = model
         self.cfg = model.cfg
-        self._local_update = jax.jit(self._local_update_impl)
-        self._probe = jax.jit(self._probe_impl)
-        self._eval = jax.jit(self._eval_impl)
-        self._cohort_update = jax.jit(self._cohort_update_impl)
-        self._probe_cohort = jax.jit(self._probe_cohort_impl)
+        # The compiled suite depends only on (cfg, runtime): Model is a
+        # stateless facade, so a suite built against the first Model seen
+        # for this key serves every later instance with the same configs.
+        key = (None if getattr(model, "custom_shard", False)
+               else (model.cfg, model.runtime))
+        suite = _JIT_CACHE.get(key) if key is not None else None
+        if suite is None:
+            suite = {
+                "local_update": jax.jit(self._local_update_impl),
+                "probe": jax.jit(self._probe_impl),
+                "eval": jax.jit(self._eval_impl),
+                "cohort_update": jax.jit(self._cohort_update_impl),
+                "probe_cohort": jax.jit(self._probe_cohort_impl),
+                "probe_update_cohort": jax.jit(self._probe_update_cohort_impl),
+            }
+            if key is None:
+                _JIT_STATS["uncached"] += 1
+            else:
+                _JIT_CACHE[key] = suite
+                _JIT_STATS["misses"] += 1
+        else:
+            _JIT_STATS["hits"] += 1
+        self._local_update = suite["local_update"]
+        self._probe = suite["probe"]
+        self._eval = suite["eval"]
+        self._cohort_update = suite["cohort_update"]
+        self._probe_cohort = suite["probe_cohort"]
+        self._probe_update_cohort = suite["probe_update_cohort"]
 
     # -- Eq. (3)-(4): τ masked SGD steps, return accumulated update ---------
     def _local_update_impl(self, params: PyTree, batches: PyTree,
@@ -80,6 +142,14 @@ class Client:
         new_params = agg.apply_update(params, update, lr)
         return new_params, losses
 
+    def cohort_update_raw(self, params, batches, masks, sizes, lr):
+        """Async variant: returns device arrays without forcing a sync, so
+        the streaming pipeline can overlap host sampling with the in-flight
+        XLA program (jax dispatches asynchronously)."""
+        return self._cohort_update(
+            params, batches, jnp.asarray(masks, jnp.float32),
+            jnp.asarray(sizes, jnp.float32), jnp.asarray(lr, jnp.float32))
+
     def cohort_update(self, params, batches, masks, sizes,
                       lr) -> tuple[PyTree, np.ndarray]:
         """One fused round step for the whole cohort.
@@ -90,9 +160,8 @@ class Client:
         the sequential local_update → aggregate → apply_update composition
         within fp tolerance (see tests/test_round_engine.py).
         """
-        new_params, losses = self._cohort_update(
-            params, batches, jnp.asarray(masks, jnp.float32),
-            jnp.asarray(sizes, jnp.float32), jnp.asarray(lr, jnp.float32))
+        new_params, losses = self.cohort_update_raw(params, batches, masks,
+                                                    sizes, lr)
         return new_params, np.asarray(losses)
 
     # -- selection probe: layer-wise gradient stats on one batch ------------
@@ -103,19 +172,21 @@ class Client:
         return sq, mean, var, p_sq
 
     def probe(self, params, batch) -> dict[str, np.ndarray]:
-        sq, mean, var, p_sq = self._probe(params, batch)
-        return {"grad_sq_norms": np.asarray(sq), "grad_means": np.asarray(mean),
-                "grad_vars": np.asarray(var), "param_sq_norms": np.asarray(p_sq)}
+        return probe_stats_dict(self._probe(params, batch))
 
     def _probe_cohort_impl(self, params: PyTree, batches: PyTree):
         def one_client(cb):
             sq, mean, var, p_sq = jax.vmap(
                 lambda b: self._probe_impl(params, b))(cb)
             # mean over the selection_batches axis == the sequential
-            # accumulate-then-divide in FLServer._probe_cohort
+            # accumulate-then-divide in FLServer.probe_round
             return sq.mean(0), mean.mean(0), var.mean(0), p_sq.mean(0)
 
         return jax.vmap(one_client)(batches)
+
+    def probe_cohort_raw(self, params, batches):
+        """Async variant of :meth:`probe_cohort` (device arrays)."""
+        return self._probe_cohort(params, batches)
 
     def probe_cohort(self, params, batches) -> dict[str, np.ndarray]:
         """Batched probe: one vmapped grad+stats call over the whole cohort.
@@ -123,9 +194,30 @@ class Client:
         batches: pytree with leading (cohort, selection_batches) axes.
         Returns (cohort, L) stat arrays, same keys as :meth:`probe`.
         """
-        sq, mean, var, p_sq = self._probe_cohort(params, batches)
-        return {"grad_sq_norms": np.asarray(sq), "grad_means": np.asarray(mean),
-                "grad_vars": np.asarray(var), "param_sq_norms": np.asarray(p_sq)}
+        return probe_stats_dict(self._probe_cohort(params, batches))
+
+    # -- fused probe+update: one program per round ---------------------------
+    def _probe_update_cohort_impl(self, params: PyTree, batches: PyTree,
+                                  masks: Array, sizes: Array, lr: Array,
+                                  probe_batches: PyTree):
+        new_params, losses = self._cohort_update_impl(params, batches, masks,
+                                                      sizes, lr)
+        # next round's selection probe, on the *updated* params — identical
+        # math to dispatching probe_cohort(new_params, ...) separately
+        stats = self._probe_cohort_impl(new_params, probe_batches)
+        return new_params, losses, stats
+
+    def probe_update_cohort_raw(self, params, batches, masks, sizes, lr,
+                                probe_batches):
+        """Cohort update + next-round probe as ONE XLA program (async).
+
+        probe_batches: (next_cohort, selection_batches, ...) pytree.  Returns
+        (new_params, losses, (sq, mean, var, p_sq)) device arrays.
+        """
+        return self._probe_update_cohort(
+            params, batches, jnp.asarray(masks, jnp.float32),
+            jnp.asarray(sizes, jnp.float32), jnp.asarray(lr, jnp.float32),
+            probe_batches)
 
     # -- evaluation -----------------------------------------------------------
     def _eval_impl(self, params: PyTree, batch: PyTree):
@@ -137,6 +229,10 @@ class Client:
             logits = self.model._head(params, jnp.mean(h, axis=1)[:, None])[:, 0]
             acc = jnp.mean((jnp.argmax(logits, -1) == batch["label"]).astype(jnp.float32))
         return loss, acc
+
+    def evaluate_raw(self, params, batch):
+        """Async variant of :meth:`evaluate` (device scalars)."""
+        return self._eval(params, batch)
 
     def evaluate(self, params, batch) -> tuple[float, float]:
         loss, acc = self._eval(params, batch)

@@ -17,6 +17,28 @@ Two round engines (``FLServer(..., engine=...)``):
   parity oracle.  Both engines draw identical per-client data and produce
   identical masks and params within fp tolerance
   (tests/test_round_engine.py).
+
+A round is composed of explicit pipeline stages (DESIGN.md §5):
+
+    plan → sample → probe → select → update → eval
+
+:meth:`FLServer.run_round` executes them synchronously; the default
+:meth:`FLServer.run` path for the vectorized engine streams them instead
+(``pipeline=True``): round t+1's cohort batches are sampled on the host
+while round t's jitted update is still in flight (jax async dispatch), the
+t+1 selection probe is dispatched on the not-yet-materialised updated
+params so it overlaps the update on-device, and — when every round
+re-selects (``selection_period == 1``) — probe and update are fused into a
+single XLA program (Client.probe_update_cohort).  The pipelined loop
+consumes the per-client rng streams in exactly the same order as the
+synchronous one, so results are unchanged (tests/test_round_engine.py).
+
+Selection-period caching is per client id: probe statistics are cached at
+refresh rounds (``t % selection_period == 0``) and masks are re-derived
+every round from the *current* cohort's cached stats and budgets; cohort
+members without cached stats are probed on demand.  (The previous
+implementation reused the first ``len(cohort)`` mask rows computed for a
+different cohort — wrong budgets and wrong clients.)
 """
 from __future__ import annotations
 
@@ -30,12 +52,14 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core import aggregation as agg
 from repro.core import masks as M
-from repro.core.client import Client
+from repro.core.client import Client, probe_stats_dict
 from repro.core.strategies import ProbeReport, select
 from repro.data.synthetic import SyntheticFederatedData
 from repro.models.model import Model
 
 PyTree = Any
+
+PROBE_STRATEGIES = ("snr", "rgn", "ours", "ours_unified")
 
 
 @dataclass
@@ -56,6 +80,9 @@ class History:
     records: list[RoundRecord] = field(default_factory=list)
 
     def summary(self) -> dict:
+        if not self.records:
+            return {"final_loss": None, "final_acc": None, "best_acc": None,
+                    "rounds": 0, "uploaded_params_total": 0}
         last = self.records[-1]
         best_acc = max(r.test_acc for r in self.records)
         return {"final_loss": last.test_loss, "final_acc": last.test_acc,
@@ -66,6 +93,39 @@ class History:
         """(T, L) count of clients selecting each layer — Figure 2 analogue."""
         return np.stack([r.mask_matrix.sum(0) for r in self.records])
 
+    def to_json(self) -> dict:
+        """JSON-serialisable dict (benchmarks/report.py consumes these)."""
+        return {
+            "summary": self.summary(),
+            "records": [{
+                "round": r.round, "test_loss": r.test_loss,
+                "test_acc": r.test_acc, "train_loss": r.train_loss,
+                "mask_matrix": np.asarray(r.mask_matrix).astype(int).tolist(),
+                "cohort": np.asarray(r.cohort).astype(int).tolist(),
+                "union_frac": r.union_frac,
+                "uploaded_params": r.uploaded_params,
+                "wall_s": r.wall_s,
+            } for r in self.records]}
+
+
+@dataclass
+class RoundPlan:
+    """Host-side round schedule: who participates and who gets probed."""
+    t: int
+    cohort: np.ndarray
+    budgets: np.ndarray
+    sizes: np.ndarray
+    probe_ids: np.ndarray    # cohort members needing a fresh probe (cohort order)
+    refresh: bool            # full re-probe round (t % selection_period == 0)
+
+
+@dataclass
+class SampledRound:
+    """All host-drawn data for one round (prefetchable ahead of time)."""
+    plan: RoundPlan
+    update_batches: dict                    # leaves (cohort, τ, B, ...)
+    probe_batches: Optional[dict]           # leaves (len(probe_ids), sel, B, ...)
+
 
 ENGINES = ("vectorized", "sequential")
 
@@ -74,7 +134,8 @@ class FLServer:
     def __init__(self, model: Model, fl: FLConfig,
                  data: SyntheticFederatedData,
                  rng: Optional[np.random.RandomState] = None,
-                 engine: str = "vectorized"):
+                 engine: str = "vectorized",
+                 pipeline: Optional[bool] = None):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
         self.model = model
@@ -83,98 +144,275 @@ class FLServer:
         self.client = Client(model)
         self.rng = rng or np.random.RandomState(fl.seed)
         self.engine = engine
+        # streaming round pipeline (vectorized engine only): double-buffered
+        # host prefetch + async probe/update overlap, same results
+        self.pipeline = (engine == "vectorized") if pipeline is None else pipeline
         self.L = model.n_selectable
         self.layer_costs = None      # optional per-layer cost vector for (P1)
-        self._cached_masks: Optional[np.ndarray] = None
+        # per-client-id probe stats (selection_period > 1); cleared at refresh
+        self._stats_cache: dict[int, dict[str, np.ndarray]] = {}
+        self._layer_params: Optional[np.ndarray] = None
 
-    # ------------------------------------------------------------------
+    # -- stage 1: plan ---------------------------------------------------
     def _budgets(self, cohort: np.ndarray) -> np.ndarray:
         return np.array([self.fl.budget_of(int(i)) for i in cohort])
 
-    def _probe_cohort(self, params: PyTree, cohort: np.ndarray) -> ProbeReport:
+    def _plan_for(self, cohort: np.ndarray, t: int) -> RoundPlan:
+        fl = self.fl
+        needs_probe = fl.strategy in PROBE_STRATEGIES
+        refresh = needs_probe and t % fl.selection_period == 0
+        if refresh:
+            probe_ids = np.asarray(cohort)
+        elif needs_probe:
+            probe_ids = np.asarray(
+                [i for i in cohort if int(i) not in self._stats_cache],
+                dtype=np.asarray(cohort).dtype)
+        else:
+            probe_ids = np.zeros((0,), np.int64)
+        return RoundPlan(t=t, cohort=cohort, budgets=self._budgets(cohort),
+                         sizes=self.data.sizes[cohort], probe_ids=probe_ids,
+                         refresh=refresh)
+
+    def plan_round(self, t: int) -> RoundPlan:
+        cohort = self.rng.choice(self.fl.n_clients, size=self.fl.cohort_size,
+                                 replace=False)
+        return self._plan_for(cohort, t)
+
+    # -- stage 2: sample (host; prefetchable) ----------------------------
+    def sample_round(self, plan: RoundPlan) -> SampledRound:
+        """Draw all of this round's data.  Per-client stream order is probe
+        batches first, then update batches — the order both engines consume
+        them in, and the order the synchronous loop draws them in."""
+        fl = self.fl
+        probe_b = (self.data.cohort_batches(plan.probe_ids, fl.batch_size,
+                                            fl.selection_batches)
+                   if len(plan.probe_ids) else None)
+        update_b = self.data.cohort_batches(plan.cohort, fl.batch_size,
+                                            fl.local_steps)
+        return SampledRound(plan=plan, update_batches=update_b,
+                            probe_batches=probe_b)
+
+    # -- stage 3: probe (device) -----------------------------------------
+    def probe_round(self, params: PyTree,
+                    sampled: SampledRound) -> Optional[dict[str, np.ndarray]]:
+        """Stat rows for ``plan.probe_ids`` (engine-specific compute)."""
+        if sampled.probe_batches is None:
+            return None
         if self.engine == "vectorized":
-            batches = self.data.cohort_batches(cohort, self.fl.batch_size,
-                                               self.fl.selection_batches)
-            return ProbeReport(**self.client.probe_cohort(params, batches))
-        rows = {"grad_sq_norms": [], "grad_means": [], "grad_vars": [],
-                "param_sq_norms": []}
-        for i in cohort:
+            return self.client.probe_cohort(params, sampled.probe_batches)
+        nb = self.fl.selection_batches
+        rows: list[dict[str, np.ndarray]] = []
+        for r in range(len(sampled.plan.probe_ids)):
             acc = None
-            for _ in range(self.fl.selection_batches):
-                batch = self.data.client_batch(int(i), self.fl.batch_size)
-                r = self.client.probe(params, batch)
-                acc = r if acc is None else \
-                    {k: acc[k] + r[k] for k in r}
-            for k in rows:
-                rows[k].append(acc[k] / self.fl.selection_batches)
-        return ProbeReport(
-            grad_sq_norms=np.stack(rows["grad_sq_norms"]),
-            param_sq_norms=np.stack(rows["param_sq_norms"]),
-            grad_means=np.stack(rows["grad_means"]),
-            grad_vars=np.stack(rows["grad_vars"]))
+            for b in range(nb):
+                batch = jax.tree.map(lambda x, r=r, b=b: x[r, b],
+                                     sampled.probe_batches)
+                out = self.client.probe(params, batch)
+                acc = out if acc is None else {k: acc[k] + out[k] for k in out}
+            rows.append({k: v / nb for k, v in acc.items()})
+        return {k: np.stack([r[k] for r in rows]) for k in rows[0]}
+
+    # -- stage 4: select (host) ------------------------------------------
+    def select_round(self, plan: RoundPlan,
+                     stats: Optional[dict[str, np.ndarray]]) -> np.ndarray:
+        fl = self.fl
+        if plan.refresh:
+            self._stats_cache.clear()
+        if stats is not None:
+            for r, i in enumerate(plan.probe_ids):
+                self._stats_cache[int(i)] = {k: stats[k][r] for k in
+                                             ProbeReport.KEYS}
+        if fl.strategy in PROBE_STRATEGIES:
+            probe = ProbeReport.from_rows(
+                [self._stats_cache[int(i)] for i in plan.cohort])
+            return select(fl.strategy, probe, plan.budgets, lam=fl.lam,
+                          costs=self.layer_costs)
+        probe = ProbeReport(grad_sq_norms=np.zeros((len(plan.cohort), self.L)))
+        return select(fl.strategy, probe, plan.budgets, lam=fl.lam)
 
     def select_masks(self, params: PyTree, cohort: np.ndarray,
                      t: int) -> np.ndarray:
-        fl = self.fl
-        budgets = self._budgets(cohort)
-        needs_probe = fl.strategy in ("snr", "rgn", "ours", "ours_unified")
-        if needs_probe and t % fl.selection_period == 0:
-            probe = self._probe_cohort(params, cohort)
-            masks = select(fl.strategy, probe, budgets, lam=fl.lam,
-                           costs=self.layer_costs)
-            self._cached_masks = masks
-        elif needs_probe and self._cached_masks is not None:
-            masks = self._cached_masks[:len(cohort)]
-        else:
-            probe = ProbeReport(grad_sq_norms=np.zeros((len(cohort), self.L)))
-            masks = select(fl.strategy, probe, budgets, lam=fl.lam)
-        return masks
+        """Compat wrapper: plan + probe + select for an externally drawn
+        cohort.  Masks always correspond to *this* cohort's clients and
+        budgets (per-client stat caching — no stale rows).  Only probe
+        batches are drawn — the caller owns the update draws."""
+        plan = self._plan_for(np.asarray(cohort), t)
+        probe_b = (self.data.cohort_batches(plan.probe_ids, self.fl.batch_size,
+                                            self.fl.selection_batches)
+                   if len(plan.probe_ids) else None)
+        stats = self.probe_round(params, SampledRound(plan, {}, probe_b))
+        return self.select_round(plan, stats)
+
+    # -- stage 5: update (device) ----------------------------------------
+    def update_round(self, params: PyTree, sampled: SampledRound,
+                     masks: np.ndarray) -> tuple[PyTree, np.ndarray]:
+        fl, plan = self.fl, sampled.plan
+        if self.engine == "vectorized":
+            return self.client.cohort_update(params, sampled.update_batches,
+                                             masks, plan.sizes, fl.lr)
+        deltas, losses = [], []
+        for row in range(len(plan.cohort)):
+            batches = jax.tree.map(lambda x, row=row: x[row],
+                                   sampled.update_batches)
+            delta, loss = self.client.local_update(params, batches,
+                                                   masks[row], fl.lr)
+            deltas.append(delta)
+            losses.append(loss)
+        update = agg.aggregate(deltas, masks, plan.sizes, self.model.cfg)
+        return agg.apply_update(params, update, fl.lr), np.asarray(losses)
+
+    # -- stage 6: eval + record ------------------------------------------
+    def _ensure_layer_params(self, params: PyTree) -> None:
+        """Shape-only per-layer param counts; computed once, params not kept."""
+        if self._layer_params is None:
+            self._layer_params = M.count_layer_params(params, self.model.cfg)
+
+    def _make_record(self, plan: RoundPlan, masks: np.ndarray,
+                     train_loss: float, test_loss: float, test_acc: float,
+                     wall_s: float) -> RoundRecord:
+        uploaded = int(sum(int(masks[r] @ self._layer_params)
+                           for r in range(len(plan.cohort))))
+        return RoundRecord(
+            round=plan.t, test_loss=test_loss, test_acc=test_acc,
+            train_loss=train_loss, mask_matrix=masks, cohort=plan.cohort,
+            union_frac=float(M.union_mask(masks).mean()),
+            uploaded_params=uploaded, wall_s=wall_s)
 
     # ------------------------------------------------------------------
     def run_round(self, params: PyTree, t: int) -> tuple[PyTree, RoundRecord]:
-        fl = self.fl
-        cohort = self.rng.choice(fl.n_clients, size=fl.cohort_size, replace=False)
+        """One synchronous round: plan → sample → probe → select → update →
+        eval.  The streaming :meth:`run` loop produces identical results."""
         t0 = time.time()
-        masks = self.select_masks(params, cohort, t)
-
-        sizes = self.data.sizes[cohort]
-        if self.engine == "vectorized":
-            batches = self.data.cohort_batches(cohort, fl.batch_size,
-                                               fl.local_steps)
-            params, losses = self.client.cohort_update(params, batches, masks,
-                                                       sizes, fl.lr)
-        else:
-            deltas, losses = [], []
-            for row, i in enumerate(cohort):
-                batches = self.data.client_batches(int(i), fl.batch_size,
-                                                   fl.local_steps)
-                delta, loss = self.client.local_update(params, batches,
-                                                       masks[row], fl.lr)
-                deltas.append(delta)
-                losses.append(loss)
-            update = agg.aggregate(deltas, masks, sizes, self.model.cfg)
-            params = agg.apply_update(params, update, fl.lr)
-
-        # metrics
-        test = self.data.test_batch()
-        test_loss, test_acc = self.client.evaluate(params, test)
-        layer_params = M.count_layer_params(params, self.model.cfg)
-        uploaded = int(sum(int(masks[r] @ layer_params) for r in range(len(cohort))))
-        rec = RoundRecord(
-            round=t, test_loss=test_loss, test_acc=test_acc,
-            train_loss=float(np.mean(losses)), mask_matrix=masks,
-            cohort=cohort, union_frac=float(M.union_mask(masks).mean()),
-            uploaded_params=uploaded, wall_s=time.time() - t0)
+        plan = self.plan_round(t)
+        sampled = self.sample_round(plan)
+        stats = self.probe_round(params, sampled)
+        masks = self.select_round(plan, stats)
+        self._ensure_layer_params(params)
+        params, losses = self.update_round(params, sampled, masks)
+        test_loss, test_acc = self.client.evaluate(params,
+                                                   self.data.test_batch())
+        rec = self._make_record(plan, masks, float(np.mean(losses)),
+                                test_loss, test_acc, time.time() - t0)
         return params, rec
 
     def run(self, params: PyTree, rounds: Optional[int] = None,
             verbose: bool = False) -> tuple[PyTree, History]:
+        T = rounds or self.fl.rounds
+        # legacy sampling redraws the test set every round (mutating
+        # _test_rng) — hoisting eval data out of the loop would change its
+        # semantics, so legacy runs always take the synchronous path
+        legacy = getattr(self.data, "legacy_sampling", False)
+        if self.engine == "vectorized" and self.pipeline and not legacy \
+                and T > 0:
+            return self._run_pipelined(params, T, verbose)
         hist = History()
-        for t in range(rounds or self.fl.rounds):
+        for t in range(T):
             params, rec = self.run_round(params, t)
             hist.records.append(rec)
             if verbose:
-                print(f"[round {t:3d}] test_loss={rec.test_loss:.4f} "
-                      f"acc={rec.test_acc:.4f} union={rec.union_frac:.2f} "
-                      f"({rec.wall_s:.2f}s)")
+                self._print_round(rec)
         return params, hist
+
+    # -- streaming pipeline ----------------------------------------------
+    def _run_pipelined(self, params: PyTree, T: int,
+                       verbose: bool) -> tuple[PyTree, History]:
+        """Double-buffered round loop (vectorized engine).
+
+        ASCII timeline, ``selection_period == 1`` (fused probe+update)::
+
+            host   | sample t+1 | select t |  dispatch  | record | sample t+2 | ...
+            device |   ...fused program t-1 (update + probe t)...| fused t ...
+
+        Round t+1's batches are drawn while round t-1's program is still in
+        flight; the selection probe for round t+1 rides round t's update
+        program (Client.probe_update_cohort).  With ``selection_period > 1``
+        the probe is a separate dispatch chained on the updated-params
+        future, so it still overlaps the update on-device; prefetching then
+        happens right after the update dispatch (the plan depends on the
+        post-select stats cache).  Every host rng and per-client data stream
+        is consumed in exactly the synchronous order — results are
+        bit-identical on masks/cohorts and fp-identical on params.
+
+        ``wall_s`` in pipelined records is the *host* time per round
+        (dispatch + select sync), not device latency — in-flight rounds
+        report milliseconds while the final round absorbs the drain.
+        """
+        fl = self.fl
+        client = self.client
+        needs_probe = fl.strategy in PROBE_STRATEGIES
+        fuse = needs_probe and fl.selection_period == 1
+        self._ensure_layer_params(params)
+        test = self.data.test_batch()
+
+        plan = self.plan_round(0)
+        sampled = self.sample_round(plan)
+        stats_dev = (client.probe_cohort_raw(params, sampled.probe_batches)
+                     if sampled.probe_batches is not None else None)
+        pending: list = []        # raw entries, or RoundRecords when verbose
+
+        for t in range(T):
+            t0 = time.time()
+            nxt = nxt_sampled = None
+            nstats = None
+            if fuse:
+                # prefetch first: probe_ids are the full cohort every round,
+                # so the t+1 plan needs no post-select cache state and the
+                # host sampling overlaps the in-flight fused program t-1
+                if t + 1 < T:
+                    nxt = self.plan_round(t + 1)
+                    nxt_sampled = self.sample_round(nxt)
+                masks = self.select_round(plan, self._stats_np(stats_dev))
+                if nxt_sampled is not None and \
+                        nxt_sampled.probe_batches is not None:
+                    params, losses, nstats = client.probe_update_cohort_raw(
+                        params, sampled.update_batches, masks, plan.sizes,
+                        fl.lr, nxt_sampled.probe_batches)
+                else:
+                    params, losses = client.cohort_update_raw(
+                        params, sampled.update_batches, masks, plan.sizes,
+                        fl.lr)
+            else:
+                masks = self.select_round(plan, self._stats_np(stats_dev))
+                params, losses = client.cohort_update_raw(
+                    params, sampled.update_batches, masks, plan.sizes, fl.lr)
+                if t + 1 < T:
+                    # plan after select (probe_ids depend on the stats cache);
+                    # host sampling overlaps the just-dispatched update
+                    nxt = self.plan_round(t + 1)
+                    nxt_sampled = self.sample_round(nxt)
+                    if nxt_sampled.probe_batches is not None:
+                        # chained on the params future: overlaps the update
+                        # on-device, no host round-trip in between
+                        nstats = client.probe_cohort_raw(
+                            params, nxt_sampled.probe_batches)
+            loss_dev, acc_dev = client.evaluate_raw(params, test)
+            entry = (plan, masks, losses, loss_dev, acc_dev,
+                     time.time() - t0)
+            if verbose:        # materialise now (syncs); finalized only once
+                entry = self._finalize(entry)
+                self._print_round(entry)
+            pending.append(entry)
+            plan, sampled, stats_dev = nxt, nxt_sampled, nstats
+
+        hist = History()
+        hist.records.extend(p if isinstance(p, RoundRecord)
+                            else self._finalize(p) for p in pending)
+        return params, hist
+
+    @staticmethod
+    def _stats_np(stats_dev) -> Optional[dict[str, np.ndarray]]:
+        """Materialise a raw probe result (the pipeline's one sync point)."""
+        if stats_dev is None:
+            return None
+        return probe_stats_dict(stats_dev)
+
+    def _finalize(self, entry: tuple) -> RoundRecord:
+        plan, masks, losses, loss_dev, acc_dev, wall_s = entry
+        return self._make_record(plan, masks, float(np.mean(np.asarray(losses))),
+                                 float(loss_dev), float(acc_dev), wall_s)
+
+    @staticmethod
+    def _print_round(rec: RoundRecord) -> None:
+        print(f"[round {rec.round:3d}] test_loss={rec.test_loss:.4f} "
+              f"acc={rec.test_acc:.4f} union={rec.union_frac:.2f} "
+              f"({rec.wall_s:.2f}s)")

@@ -30,6 +30,13 @@ class ProbeReport:
     grad_means: Optional[np.ndarray] = None       # (n, L): mean(g_l)  (SNR)
     grad_vars: Optional[np.ndarray] = None        # (n, L): var(g_l)   (SNR)
 
+    KEYS = ("grad_sq_norms", "param_sq_norms", "grad_means", "grad_vars")
+
+    @classmethod
+    def from_rows(cls, rows: "list[dict[str, np.ndarray]]") -> "ProbeReport":
+        """Stack per-client stat dicts (one row per cohort member)."""
+        return cls(**{k: np.stack([r[k] for r in rows]) for k in cls.KEYS})
+
     @property
     def n(self) -> int:
         return self.grad_sq_norms.shape[0]

@@ -14,10 +14,29 @@ offline; we synthesise tasks with the same *heterogeneity structure*:
 
 Both variants support classification (pooled head) and LM (next-token)
 objectives.  Sampling is numpy-based and deterministic per (seed, client).
+
+Sampling paths (DESIGN.md §5):
+
+* **vectorized** (default) — one batched draw per ``(client, call)``: labels
+  via ``rng.choice``, class-conditional tokens via cumsum+searchsorted over
+  ``class_probs``, signal/noise masks and noise tokens as whole-tensor draws.
+  Each client keeps its own ``RandomState`` stream, so the vectorized and
+  sequential round engines consume bit-identical data.
+* **scalar oracle** (:meth:`SyntheticFederatedData._sample`) — consumes the
+  rng stream in exactly the same order but applies the per-sample transforms
+  in a Python loop; tests pin it bit-identical to the vectorized path.
+* **legacy** (``legacy_sampling = True``) — the pre-streaming-pipeline
+  per-sample loop (``rng.choice(p=...)`` per sample, per-round test-set
+  resampling), kept as the baseline for the ``full_round`` micro-benchmark.
+
+The held-out test set is drawn **once** (lazily, from a dedicated rng
+stream) from the global mixture Σ_i α_i P_i; :meth:`test_batch` returns a
+fixed slice of it, so per-round evaluation neither adds sampling noise nor
+mutates the pretrain/test rng stream (it previously did both).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -110,6 +129,25 @@ class SyntheticFederatedData:
                     / np.sqrt(cfg.patch_dim)
                 self.domain_map.append(M)
             self.domain_map.append(np.eye(cfg.patch_dim))
+            self._maps = np.stack(self.domain_map)
+
+        # vectorized-sampling tables: per-class / per-client inverse-cdf rows
+        # (normalised exactly like np.random.choice: cumsum then /= last)
+        self._perms = np.stack(self.domain_perm)
+        cdf = np.cumsum(self.class_probs, axis=1)
+        self._class_cdf = cdf / cdf[:, -1:]
+        lcdf = np.cumsum(self.client_label_p, axis=1)
+        self._label_cdf = lcdf / lcdf[:, -1:]
+
+        # pre-streaming-pipeline sampling path, kept as the full_round
+        # micro-benchmark baseline (per-sample loops + per-round test draws)
+        self.legacy_sampling = False
+
+        # held-out test set: drawn once (lazily) from a dedicated stream so
+        # neither pretrain_batch nor legacy test_batch (both on _test_rng)
+        # see a construction-time offset; test_batch() slices it
+        self._heldout_rng = np.random.RandomState(cfg.seed + 424242)
+        self._test_set: Optional[dict] = None
 
     # ------------------------------------------------------------------
     @property
@@ -117,13 +155,140 @@ class SyntheticFederatedData:
         """Relative sample sizes α_i = d_i / Σ d_j (Eq. 1)."""
         return self.sizes / self.sizes.sum()
 
-    def _sample(self, rng: np.random.RandomState, label_p: np.ndarray,
-                domain: int, n: int) -> dict:
+    # -- vectorized path ------------------------------------------------
+    def _cls_tokens(self, y: np.ndarray, u: np.ndarray) -> np.ndarray:
+        """Inverse-cdf class-conditional tokens: searchsorted per class."""
+        out = np.empty(u.shape, np.int64)
+        for c in np.unique(y):
+            m = y == c
+            out[m] = np.searchsorted(self._class_cdf[c], u[m], side="right")
+        return out
+
+    def _sample_vec(self, rng: np.random.RandomState, label_p: np.ndarray,
+                    domain: int, n: int) -> dict:
+        """Whole-tensor draws; rng stream order: y, [eps | sig, u, noise]."""
         cfg = self.cfg
         y = rng.choice(cfg.n_classes, size=n, p=label_p)
         if cfg.modality == "patches":
-            # patches = domain_style(prototype + noise); identity domain used
-            # for pretraining (index -1)
+            base = self.proto[y] + rng.randn(n, cfg.patch_tokens,
+                                             cfg.patch_dim) * 1.5
+            M = self.domain_map[domain if domain < len(self.domain_map)
+                                else -1]
+            patches = base @ M.T
+            batch = {"patches": patches.astype(np.float32)}
+            if cfg.objective == "classification":
+                batch["label"] = y.astype(np.int32)
+            return batch
+        sig = rng.random_sample((n, cfg.seq_len))
+        u = rng.random_sample((n, cfg.seq_len))
+        noise = rng.randint(0, cfg.vocab_size, (n, cfg.seq_len))
+        toks = np.where(sig < cfg.signal, self._cls_tokens(y, u), noise)
+        toks = self.domain_perm[domain][toks].astype(np.int32)
+        batch = {"tokens": toks}
+        if cfg.objective == "classification":
+            batch["label"] = y.astype(np.int32)
+        return batch
+
+    def _sample_mixture_vec(self, rng: np.random.RandomState,
+                            owners: np.ndarray) -> dict:
+        """Batched draw with per-sample (label_p, domain) given by owners."""
+        cfg = self.cfg
+        n = len(owners)
+        u_y = rng.random_sample(n)
+        y = np.empty(n, np.int64)
+        for i in np.unique(owners):
+            m = owners == i
+            y[m] = np.searchsorted(self._label_cdf[i], u_y[m], side="right")
+        domains = self.client_domain[owners]
+        if cfg.modality == "patches":
+            base = self.proto[y] + rng.randn(n, cfg.patch_tokens,
+                                             cfg.patch_dim) * 1.5
+            patches = np.einsum("npd,ned->npe", base, self._maps[domains])
+            batch = {"patches": patches.astype(np.float32)}
+            if cfg.objective == "classification":
+                batch["label"] = y.astype(np.int32)
+            return batch
+        sig = rng.random_sample((n, cfg.seq_len))
+        u = rng.random_sample((n, cfg.seq_len))
+        noise = rng.randint(0, cfg.vocab_size, (n, cfg.seq_len))
+        toks = np.where(sig < cfg.signal, self._cls_tokens(y, u), noise)
+        toks = self._perms[domains[:, None], toks].astype(np.int32)
+        batch = {"tokens": toks}
+        if cfg.objective == "classification":
+            batch["label"] = y.astype(np.int32)
+        return batch
+
+    # -- scalar parity oracle -------------------------------------------
+    def _sample(self, rng: np.random.RandomState, label_p: np.ndarray,
+                domain: int, n: int) -> dict:
+        """Per-sample transform loop over the *same* stream as _sample_vec.
+
+        Draws happen batched in the identical order (y, then eps or
+        sig/u/noise); only the inverse-cdf lookup and masking run per sample.
+        tests/test_synthetic_sampler.py pins this bit-identical to the
+        vectorized path — the oracle for the whole-tensor transforms.
+        """
+        cfg = self.cfg
+        y = rng.choice(cfg.n_classes, size=n, p=label_p)
+        if cfg.modality == "patches":
+            eps = rng.randn(n, cfg.patch_tokens, cfg.patch_dim)
+            M = self.domain_map[domain if domain < len(self.domain_map)
+                                else -1]
+            patches = np.stack([(self.proto[y[k]] + eps[k] * 1.5) @ M.T
+                                for k in range(n)])
+            batch = {"patches": patches.astype(np.float32)}
+            if cfg.objective == "classification":
+                batch["label"] = y.astype(np.int32)
+            return batch
+        sig = rng.random_sample((n, cfg.seq_len))
+        u = rng.random_sample((n, cfg.seq_len))
+        noise = rng.randint(0, cfg.vocab_size, (n, cfg.seq_len))
+        toks = np.empty((n, cfg.seq_len), np.int32)
+        perm = self.domain_perm[domain]
+        for k in range(n):
+            cls_k = np.searchsorted(self._class_cdf[y[k]], u[k], side="right")
+            toks[k] = perm[np.where(sig[k] < cfg.signal, cls_k, noise[k])]
+        batch = {"tokens": toks}
+        if cfg.objective == "classification":
+            batch["label"] = y.astype(np.int32)
+        return batch
+
+    def _sample_mixture(self, rng: np.random.RandomState,
+                        owners: np.ndarray) -> dict:
+        """Scalar oracle for :meth:`_sample_mixture_vec` (same stream)."""
+        cfg = self.cfg
+        n = len(owners)
+        u_y = rng.random_sample(n)
+        y = np.array([np.searchsorted(self._label_cdf[i], u_y[k], side="right")
+                      for k, i in enumerate(owners)], np.int64)
+        domains = self.client_domain[owners]
+        if cfg.modality == "patches":
+            eps = rng.randn(n, cfg.patch_tokens, cfg.patch_dim)
+            patches = np.stack([(self.proto[y[k]] + eps[k] * 1.5)
+                                @ self._maps[domains[k]].T for k in range(n)])
+            batch = {"patches": patches.astype(np.float32)}
+            if cfg.objective == "classification":
+                batch["label"] = y.astype(np.int32)
+            return batch
+        sig = rng.random_sample((n, cfg.seq_len))
+        u = rng.random_sample((n, cfg.seq_len))
+        noise = rng.randint(0, cfg.vocab_size, (n, cfg.seq_len))
+        toks = np.empty((n, cfg.seq_len), np.int32)
+        for k in range(n):
+            cls_k = np.searchsorted(self._class_cdf[y[k]], u[k], side="right")
+            toks[k] = self.domain_perm[domains[k]][
+                np.where(sig[k] < cfg.signal, cls_k, noise[k])]
+        batch = {"tokens": toks}
+        if cfg.objective == "classification":
+            batch["label"] = y.astype(np.int32)
+        return batch
+
+    # -- legacy (pre-pipeline) path -------------------------------------
+    def _sample_legacy(self, rng: np.random.RandomState, label_p: np.ndarray,
+                       domain: int, n: int) -> dict:
+        cfg = self.cfg
+        y = rng.choice(cfg.n_classes, size=n, p=label_p)
+        if cfg.modality == "patches":
             base = self.proto[y] + rng.randn(n, cfg.patch_tokens,
                                              cfg.patch_dim) * 1.5
             M = self.domain_map[domain if domain < len(self.domain_map)
@@ -147,15 +312,31 @@ class SyntheticFederatedData:
             batch["label"] = y.astype(np.int32)
         return batch
 
+    # -- public API ------------------------------------------------------
+    def _dispatch(self, rng, label_p, domain, n) -> dict:
+        if self.legacy_sampling:
+            return self._sample_legacy(rng, label_p, domain, n)
+        return self._sample_vec(rng, label_p, domain, n)
+
     def client_batch(self, i: int, batch_size: int) -> dict:
         """One minibatch from client i's distribution."""
-        return self._sample(self._rngs[i], self.client_label_p[i],
-                            self.client_domain[i], batch_size)
+        return self._dispatch(self._rngs[i], self.client_label_p[i],
+                              self.client_domain[i], batch_size)
 
     def client_batches(self, i: int, batch_size: int, n: int) -> dict:
-        """``n`` stacked minibatches (leading axis = τ) for lax.scan."""
-        bs = [self.client_batch(i, batch_size) for _ in range(n)]
-        return {k: np.stack([b[k] for b in bs]) for k in bs[0]}
+        """``n`` stacked minibatches (leading axis = τ) for lax.scan.
+
+        Vectorized path: ONE draw of ``n·batch_size`` samples reshaped to
+        ``(n, batch_size, ...)`` — the per-batch Python loop only survives in
+        legacy mode.
+        """
+        if self.legacy_sampling:
+            bs = [self.client_batch(i, batch_size) for _ in range(n)]
+            return {k: np.stack([b[k] for b in bs]) for k in bs[0]}
+        flat = self._sample_vec(self._rngs[i], self.client_label_p[i],
+                                self.client_domain[i], n * batch_size)
+        return {k: v.reshape((n, batch_size) + v.shape[1:])
+                for k, v in flat.items()}
 
     def cohort_batches(self, cohort, batch_size: int, n: int) -> dict:
         """Stacked batches for a whole cohort: leaves (len(cohort), n, ...).
@@ -173,17 +354,38 @@ class SyntheticFederatedData:
         cfg = self.cfg
         label_p = np.full(cfg.n_classes, 1.0 / cfg.n_classes)
         identity = len(self.domain_perm) - 1
-        return self._sample(self._test_rng, label_p, identity, batch_size)
+        return self._dispatch(self._test_rng, label_p, identity, batch_size)
+
+    def _draw_test_set(self) -> dict:
+        """The global-mixture held-out set, drawn once (dedicated stream)."""
+        cfg = self.cfg
+        owners = self._heldout_rng.choice(cfg.n_clients, size=cfg.test_samples,
+                                          p=self.alpha)
+        return self._sample_mixture_vec(self._heldout_rng, owners)
 
     def test_batch(self, batch_size: Optional[int] = None) -> dict:
-        """Held-out batch from the *global* mixture Σ_i α_i P_i."""
+        """Held-out batch from the *global* mixture Σ_i α_i P_i.
+
+        Returns a fixed slice of the once-drawn test set, so repeated calls
+        are deterministic and free of sampling noise.  Legacy mode
+        reproduces the pre-pipeline behaviour exactly (fresh per-sample
+        draws that mutate the test rng every call — `_test_rng` is never
+        touched by the fixed set, so legacy streams match pre-PR
+        bit-for-bit).
+        """
         cfg = self.cfg
         n = batch_size or cfg.test_samples
-        rng = self._test_rng
-        # mixture over clients weighted by alpha
-        owners = rng.choice(cfg.n_clients, size=n, p=self.alpha)
-        outs = []
-        for i in owners:
-            outs.append(self._sample(rng, self.client_label_p[i],
-                                     self.client_domain[i], 1))
-        return {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+        if self.legacy_sampling:
+            rng = self._test_rng
+            owners = rng.choice(cfg.n_clients, size=n, p=self.alpha)
+            outs = [self._sample_legacy(rng, self.client_label_p[i],
+                                        self.client_domain[i], 1)
+                    for i in owners]
+            return {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+        if n > cfg.test_samples:
+            raise ValueError(
+                f"test_batch({n}) exceeds the fixed held-out set "
+                f"(test_samples={cfg.test_samples})")
+        if self._test_set is None:
+            self._test_set = self._draw_test_set()
+        return {k: v[:n] for k, v in self._test_set.items()}

@@ -281,6 +281,9 @@ class Model:
         cfg.validate()
         self.cfg = cfg
         self.runtime = runtime
+        # custom shard callables change the lowering; the shared jit suite
+        # cache (core/client.py) only serves default-sharded models
+        self.custom_shard = shard is not None
         self.shard = shard or (lambda x, kind=None: x)
 
     # -- params ------------------------------------------------------------

@@ -1,0 +1,69 @@
+"""Shared jit suite cache: repeated FLServer/Client construction for the
+same (ArchConfig, RuntimeConfig) must reuse compiled programs — zero
+recompilation across benchmark sweeps and multi-server runs."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
+from repro.core import client as client_mod
+from repro.core.client import Client
+from repro.core.server import FLServer
+from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
+from repro.models.model import Model
+
+
+def _world():
+    cfg = reduced(get_arch("xlm_roberta_base"), n_layers=2, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    task = FederatedTaskConfig(n_clients=8, n_classes=10,
+                               vocab_size=cfg.vocab_size, seq_len=8,
+                               samples_per_client=16, skew="label",
+                               objective="classification")
+    fl = FLConfig(n_clients=8, cohort_size=3, rounds=2, local_steps=2,
+                  lr=0.01, batch_size=4, strategy="ours", budget=1, lam=1.0,
+                  seed=0)
+    return model, model.init(jax.random.PRNGKey(0)), task, fl
+
+
+def test_repeated_server_construction_zero_recompilation():
+    model, params, task, fl = _world()
+    client_mod.clear_jit_cache()
+
+    s1 = FLServer(model, fl, SyntheticFederatedData(task))
+    _, h1 = s1.run(params)
+    stats = client_mod.jit_cache_stats()
+    assert stats["misses"] == 1 and stats["entries"] == 1
+    hot = {name: getattr(s1.client, f"_{name}")
+           for name in ("cohort_update", "probe_cohort",
+                        "probe_update_cohort", "eval")}
+    sizes = {name: fn._cache_size() for name, fn in hot.items()}
+
+    # same model object, and a *fresh* Model with an equal config: both hit
+    s2 = FLServer(model, fl, SyntheticFederatedData(task))
+    model2 = Model(model.cfg, model.runtime)
+    s3 = FLServer(model2, fl, SyntheticFederatedData(task))
+    stats = client_mod.jit_cache_stats()
+    assert stats["hits"] >= 2 and stats["misses"] == 1
+
+    for name, fn in hot.items():
+        assert getattr(s2.client, f"_{name}") is fn
+        assert getattr(s3.client, f"_{name}") is fn
+
+    _, h2 = s2.run(params)
+    _, h3 = s3.run(params)
+    for name, fn in hot.items():
+        assert fn._cache_size() == sizes[name], \
+            f"{name} recompiled on repeated server construction"
+    # identical configuration => identical runs through the shared programs
+    assert h1.summary() == h2.summary() == h3.summary()
+
+
+def test_custom_shard_models_bypass_cache():
+    model, _, _, _ = _world()
+    client_mod.clear_jit_cache()
+    Client(model)
+    sharded = Model(model.cfg, model.runtime, shard=lambda x, kind=None: x)
+    Client(sharded)
+    stats = client_mod.jit_cache_stats()
+    assert stats["misses"] == 1 and stats["uncached"] == 1

@@ -95,3 +95,38 @@ def test_seed_determinism(world, engine):
         np.testing.assert_array_equal(r1.cohort, r2.cohort)
         np.testing.assert_array_equal(r1.mask_matrix, r2.mask_matrix)
     assert h1.summary() == h2.summary()
+
+
+@pytest.mark.parametrize("period", [2, 3])
+def test_engine_parity_selection_period(world, period):
+    """Both engines share the per-client stat cache + on-demand probes."""
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=4, local_steps=1,
+                  lr=0.01, batch_size=4, strategy="ours",
+                  budgets=(1, 2, 3, 4), selection_period=period, lam=1.0,
+                  seed=5)
+    _assert_parity(model, params, task, fl)
+
+
+@pytest.mark.parametrize("period", [1, 2])
+def test_pipelined_run_matches_synchronous(world, period):
+    """The streaming pipeline (prefetch + async/fused probe) is a pure
+    scheduling change: cohorts and masks bit-identical, params within fp."""
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=3, local_steps=2,
+                  lr=0.01, batch_size=4, strategy="ours", budget=2,
+                  selection_period=period, lam=1.0, seed=13)
+    data_p = SyntheticFederatedData(task)
+    data_s = SyntheticFederatedData(task)
+    p_pipe, h_pipe = FLServer(model, fl, data_p, pipeline=True).run(params)
+    p_sync, h_sync = FLServer(model, fl, data_s, pipeline=False).run(params)
+    for rp, rs in zip(h_pipe.records, h_sync.records):
+        np.testing.assert_array_equal(rp.cohort, rs.cohort)
+        np.testing.assert_array_equal(rp.mask_matrix, rs.mask_matrix)
+        assert rp.train_loss == pytest.approx(rs.train_loss, abs=1e-5)
+        assert rp.test_loss == pytest.approx(rs.test_loss, abs=1e-5)
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(np.abs(np.asarray(a, np.float32)
+                                  - np.asarray(b, np.float32)).max()),
+        p_pipe, p_sync)))
+    assert err < 1e-5, f"pipelined param divergence {err}"

@@ -1,4 +1,6 @@
 """Integration: full Algorithm 1 rounds on the simulator + invariants."""
+import json
+
 import jax
 import numpy as np
 import pytest
@@ -75,3 +77,65 @@ def test_frozen_groups_never_move(setup):
             d = jax.tree.map(lambda a, b: float(abs(np.asarray(a - b)).max()),
                              params[grp], new_params[grp])
             assert max(jax.tree.leaves(d) or [0.0]) == 0.0, grp
+
+
+def test_selection_period_masks_track_cohort_budgets(setup):
+    """Regression (stale-mask bug): with selection_period > 1 and
+    heterogeneous budgets, cached selections must be re-derived for the
+    *current* cohort's clients and budgets — the old code reused mask rows
+    computed for a different cohort, so a budget-1 client could be handed
+    a budget-4 row."""
+    model, params, data = setup
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=5, local_steps=1,
+                  lr=0.01, batch_size=8, strategy="ours",
+                  budgets=tuple(1 + (i % 4) for i in range(12)),
+                  selection_period=3, lam=1.0)
+    server = FLServer(model, fl, data)
+    _, hist = server.run(params)
+    assert len(hist.records) == 5
+    for rec in hist.records:
+        budgets = np.array([fl.budget_of(int(i)) for i in rec.cohort])
+        assert np.all(rec.mask_matrix.sum(1) <= budgets), \
+            f"round {rec.round}: rows {rec.mask_matrix.sum(1)} vs {budgets}"
+
+
+def test_history_empty_summary_and_to_json(setup):
+    from repro.core.server import History
+    empty = History()
+    s = empty.summary()
+    assert s["rounds"] == 0 and s["final_acc"] is None
+    json.dumps(empty.to_json())          # serialisable even when empty
+
+    model, params, data = setup
+    fl = FLConfig(n_clients=12, cohort_size=3, rounds=2, local_steps=1,
+                  lr=0.01, batch_size=8, strategy="top", budget=2)
+    _, hist = FLServer(model, fl, data).run(params)
+    j = json.loads(json.dumps(hist.to_json()))
+    assert j["summary"]["rounds"] == 2
+    assert len(j["records"]) == 2
+    rec = j["records"][0]
+    assert len(rec["mask_matrix"]) == 3          # cohort rows
+    assert rec["uploaded_params"] > 0
+    assert isinstance(rec["cohort"][0], int)
+
+
+def test_select_masks_compat_draws_probe_batches_only(setup):
+    """The public select_masks path probes exactly the given cohort and
+    leaves every client's update stream untouched (the caller owns it)."""
+    model, params, data = setup
+    fl = FLConfig(n_clients=12, cohort_size=3, rounds=1, local_steps=1,
+                  lr=0.01, batch_size=4, strategy="ours", budget=2, lam=1.0)
+    server = FLServer(model, fl, data)
+    cohort = np.array([2, 5, 9])
+
+    def state(i):    # (key, pos): pos catches draws within one MT block
+        s = data._rngs[i].get_state()
+        return s[1].copy(), s[2]
+
+    before = [state(i) for i in range(12)]
+    masks = server.select_masks(params, cohort, 0)
+    assert masks.shape == (3, model.n_selectable)
+    assert np.all(masks.sum(1) <= 2)
+    moved = [not (np.array_equal(before[i][0], state(i)[0])
+                  and before[i][1] == state(i)[1]) for i in range(12)]
+    assert moved == [i in (2, 5, 9) for i in range(12)]

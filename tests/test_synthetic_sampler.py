@@ -1,0 +1,114 @@
+"""Vectorized sampler vs the scalar parity oracle — bit-identical draws.
+
+The vectorized path (`_sample_vec` / `_sample_mixture_vec`) must consume the
+per-client rng streams in exactly the same order as the scalar per-sample
+oracle (`_sample` / `_sample_mixture`) and produce bit-identical batches —
+the foundation of the engine-parity guarantee after the streaming-pipeline
+refactor.
+"""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
+
+
+def _pair(seed=1234):
+    return np.random.RandomState(seed), np.random.RandomState(seed)
+
+
+CASES = {
+    "tokens-label": dict(skew="label", modality="tokens"),
+    "tokens-feature": dict(skew="feature", modality="tokens"),
+    "tokens-lm": dict(skew="label", modality="tokens", objective="lm"),
+    "patches-label": dict(skew="label", modality="patches"),
+    "patches-feature": dict(skew="feature", modality="patches"),
+}
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_vectorized_matches_scalar_oracle(case):
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=6, n_classes=5, vocab_size=97, seq_len=16, seed=3,
+        **CASES[case]))
+    for i in (0, 4):
+        r_vec, r_ora = _pair(100 + i)
+        label_p = data.client_label_p[i]
+        dom = int(data.client_domain[i])
+        a = data._sample_vec(r_vec, label_p, dom, 33)
+        b = data._sample(r_ora, label_p, dom, 33)
+        assert a.keys() == b.keys()
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=f"{case}:{k}")
+        # the streams advanced identically too
+        assert r_vec.randint(1 << 30) == r_ora.randint(1 << 30)
+
+
+@pytest.mark.parametrize("case", ["tokens-feature", "patches-feature"])
+def test_mixture_vectorized_matches_scalar_oracle(case):
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=8, n_classes=5, vocab_size=97, seq_len=16, seed=5,
+        **CASES[case]))
+    r_vec, r_ora = _pair(7)
+    owners = r_vec.choice(8, size=40, p=data.alpha)
+    owners2 = r_ora.choice(8, size=40, p=data.alpha)
+    np.testing.assert_array_equal(owners, owners2)
+    a = data._sample_mixture_vec(r_vec, owners)
+    b = data._sample_mixture(r_ora, owners)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"{case}:{k}")
+    assert r_vec.randint(1 << 30) == r_ora.randint(1 << 30)
+
+
+def test_client_batches_is_one_vectorized_draw():
+    """client_batches == one (n·B)-sample draw of the same client stream."""
+    task = FederatedTaskConfig(n_clients=4, seq_len=8, seed=9)
+    d1 = SyntheticFederatedData(task)
+    d2 = SyntheticFederatedData(task)
+    stacked = d1.client_batches(2, 4, 3)
+    flat = d2._sample_vec(d2._rngs[2], d2.client_label_p[2],
+                          int(d2.client_domain[2]), 12)
+    for k in stacked:
+        np.testing.assert_array_equal(
+            stacked[k].reshape(flat[k].shape), flat[k])
+
+
+def test_test_set_fixed_and_stream_pure():
+    """test_batch() is deterministic and never mutates the pretrain/legacy
+    test rng stream (the held-out set has its own dedicated stream)."""
+    data = SyntheticFederatedData(FederatedTaskConfig(n_clients=5, seed=11))
+    s0 = data._test_rng.get_state()
+    a = data.test_batch()
+    b = data.test_batch()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    s1 = data._test_rng.get_state()
+    np.testing.assert_array_equal(s0[1], s1[1])
+    assert s0[2] == s1[2]        # pos: catches draws within one MT block
+    small = data.test_batch(10)
+    assert small["tokens"].shape[0] == 10
+    np.testing.assert_array_equal(small["tokens"], a["tokens"][:10])
+    with pytest.raises(ValueError):
+        data.test_batch(data.cfg.test_samples + 1)
+
+
+def test_same_seed_same_test_set():
+    task = FederatedTaskConfig(n_clients=5, seed=13)
+    a = SyntheticFederatedData(task).test_batch()
+    b = SyntheticFederatedData(task).test_batch()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_legacy_sampling_path_shapes_and_rng_mutation():
+    """The pre-pipeline baseline still works (full_round benchmark)."""
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=4, seq_len=8, seed=17, test_samples=12))
+    data.legacy_sampling = True
+    b = data.client_batch(1, 6)
+    assert b["tokens"].shape == (6, 8)
+    stacked = data.client_batches(0, 4, 2)
+    assert stacked["tokens"].shape == (2, 4, 8)
+    state0 = data._test_rng.get_state()[1].copy()
+    t = data.test_batch(12)
+    assert t["tokens"].shape == (12, 8)
+    assert not np.array_equal(state0, data._test_rng.get_state()[1])
