@@ -24,8 +24,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+from repro.api import Experiment
 from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
-from repro.core.server import FLServer, History
+from repro.core.server import History
 from repro.data.pretrain import pretrain
 from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
 from repro.models.model import Model
@@ -90,16 +91,22 @@ ENGINE = os.environ.get("BENCH_ENGINE", "vectorized")
 PIPELINE = os.environ.get("BENCH_PIPELINE", "1") != "0"
 
 
-def run_fl(scn: Scenario, strategy: str, *, budget=1, budgets=None,
+def run_fl(scn: Scenario, strategy, *, budget=1, budgets=None,
            rounds: int = ROUNDS, seed: int = 0,
            engine: str = ENGINE, pipeline: bool = PIPELINE) -> History:
+    """Run one scenario through the Experiment front door.
+
+    ``strategy`` is a registered name or any Strategy instance (e.g. a
+    per-client MixtureStrategy) — repro.api.Experiment resolves it.
+    """
     model, params, data = build_world(scn, seed)
-    fl = FLConfig(n_clients=N_CLIENTS, cohort_size=COHORT, rounds=rounds,
+    fl = FLConfig(cohort_size=COHORT, rounds=rounds,
                   local_steps=scn.local_steps, lr=scn.lr,
-                  batch_size=scn.batch_size, strategy=strategy,
+                  batch_size=scn.batch_size,
                   budget=budget, budgets=budgets, lam=scn.lam, seed=seed)
-    server = FLServer(model, fl, data, engine=engine, pipeline=pipeline)
-    _, hist = server.run(params)
+    exp = Experiment(model, data, strategy, fl=fl, engine=engine,
+                     pipeline=pipeline)
+    _, hist = exp.run(params)
     return hist
 
 

@@ -1,14 +1,17 @@
-"""CI micro-benchmark gate: round_engine + full_round with budget asserts.
+"""CI micro-benchmark gate: round_engine + full_round + probe_trim.
 
     PYTHONPATH=src python -m benchmarks.micro_ci
 
-Runs the two engine micro-benchmarks, records them to
-``experiments/bench/BENCH_round_engine.json`` and
-``experiments/bench/BENCH_full_round.json`` (uploaded as a CI artifact),
-and enforces the wall-clock budget: the vectorized engine step must not be
-slower than the sequential oracle at any cohort size, and the streaming
+Runs the engine micro-benchmarks, records them to
+``experiments/bench/BENCH_round_engine.json``,
+``experiments/bench/BENCH_full_round.json`` and
+``experiments/bench/BENCH_probe_trim.json`` (uploaded as CI artifacts),
+and enforces the wall-clock budgets: the vectorized engine step must not be
+slower than the sequential oracle at any cohort size, the streaming
 pipeline's full round (sampling included) must not be slower than the
-pre-pipeline legacy path.  Exits non-zero on a budget violation.
+pre-pipeline legacy path (no dispatch regression from the pluggable-API
+probe path), and the requirements-trimmed probes must not be slower than
+the all-stats probe.  Exits non-zero on a budget violation.
 """
 from __future__ import annotations
 
@@ -21,13 +24,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     from benchmarks.common import save_result
-    from benchmarks.run import full_round_benchmarks, round_engine_benchmarks
+    from benchmarks.run import (full_round_benchmarks, probe_trim_benchmarks,
+                                round_engine_benchmarks)
 
     print("name,us_per_call,derived")
     engine_rows = round_engine_benchmarks()
     save_result("BENCH_round_engine", {"rows": engine_rows})
     full = full_round_benchmarks()
     save_result("BENCH_full_round", full)
+    probe = probe_trim_benchmarks()
+    save_result("BENCH_probe_trim", probe)
 
     failures = []
     by_cohort: dict = {}
@@ -43,14 +49,25 @@ def main() -> None:
         failures.append(
             f"full_round: vectorized {full['vectorized_us_per_round']:.0f}us"
             f" > legacy {full['legacy_us_per_round']:.0f}us")
+    # requirements-trimmed probes do strictly less work than the all-stats
+    # probe; gate the median of *paired* per-rep ratios (load spikes hit
+    # both sides of a pair and cancel), with 10% headroom for CI jitter
+    for name in ("ours_trimmed", "snr_trimmed"):
+        if probe[f"{name}_ratio"] > 1.10:
+            failures.append(
+                f"probe_trim: {name} paired ratio "
+                f"{probe[f'{name}_ratio']:.2f} > 1.10 vs all_stats")
 
     print(f"full_round speedup over pre-pipeline path: "
           f"{full['speedup']:.2f}x")
+    print(f"probe trim (ours): paired ratio "
+          f"{probe['ours_trimmed_ratio']:.2f} vs all-stats probe")
     if failures:
         for f in failures:
             print(f"BUDGET VIOLATION: {f}", file=sys.stderr)
         sys.exit(1)
-    print("micro-benchmark budget: OK (vectorized <= sequential)")
+    print("micro-benchmark budget: OK "
+          "(vectorized <= sequential, trimmed probe <= all-stats)")
 
 
 if __name__ == "__main__":

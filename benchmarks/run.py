@@ -86,6 +86,8 @@ def micro_benchmarks():
     # full round including host-side sampling: pre-PR scalar path vs the
     # vectorized sampler + streaming pipeline
     full_round_benchmarks()
+    # requirements-trimmed selection probe vs the all-stats probe
+    probe_trim_benchmarks()
 
 
 def round_engine_benchmarks() -> list[dict]:
@@ -163,6 +165,72 @@ def round_engine_benchmarks() -> list[dict]:
                          "engine": engine, "cohort": cohort_n,
                          "us_per_call": us, "derived": derived})
     return rows
+
+
+def probe_trim_benchmarks(cohort_n: int = 8) -> dict:
+    """Warm µs per cohort probe: requirements-trimmed vs all-stats.
+
+    Strategies declare ``probe_requirements`` (repro.api.strategy), so the
+    probe computes only the stats the strategy consumes — ``ours`` pays for
+    gradient square norms only, while the pre-API probe always paid for the
+    full SNR+RGN stat set.  Times ``Client.probe_cohort`` on pre-drawn
+    batches for each requirement set; ``micro_ci`` gates trimmed <= all.
+    Returns a dict suitable for BENCH_probe_trim.json.
+    """
+    from repro.api import get_strategy
+    from repro.configs.base import (FLConfig, RuntimeConfig, get_arch,
+                                    reduced)
+    from repro.core.client import Client
+    from repro.core.strategies import PROBE_KEYS
+    from repro.data.synthetic import (FederatedTaskConfig,
+                                      SyntheticFederatedData)
+    from repro.models.model import Model
+
+    cfg = reduced(get_arch("xlm_roberta_base"), n_layers=4, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=20, n_classes=10, vocab_size=cfg.vocab_size, seq_len=8,
+        samples_per_client=16, skew="label", objective="classification"))
+    fl = FLConfig(n_clients=20, batch_size=4, selection_batches=2)
+    client = Client(model)
+    probe_b = data.cohort_batches(np.arange(cohort_n), fl.batch_size,
+                                  fl.selection_batches)
+    reps = 3 if FAST else 25
+    variants = [
+        ("all_stats", PROBE_KEYS, None),
+        ("ours_trimmed", ("grad_sq_norms",), None),
+        ("snr_trimmed", ("grad_means", "grad_vars"),
+         get_strategy("snr").device_score_fn()),
+    ]
+    for _, reqs, score_fn in variants:       # warmup: jit compile
+        jax.block_until_ready(
+            client.probe_cohort_raw(params, probe_b, reqs, score_fn))
+    # interleave variants across reps (decorrelates host noise) and take
+    # min-of-N: the probe is grad-dominated on these tiny CPU models, so
+    # the trim delta is small relative to scheduler jitter
+    times: dict = {name: [] for name, _, _ in variants}
+    for _ in range(reps):
+        for name, reqs, score_fn in variants:
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                client.probe_cohort_raw(params, probe_b, reqs, score_fn))
+            times[name].append(time.perf_counter() - t0)
+    out: dict = {"cohort": cohort_n, "reps": reps}
+    base = np.asarray(times["all_stats"])
+    for name, _, _ in variants:
+        t = np.asarray(times[name])
+        us = float(np.min(t) * 1e6)
+        derived = "-"
+        if name != "all_stats":
+            # paired per-rep ratio vs the all-stats call of the same
+            # interleave round — load spikes hit both sides and cancel
+            ratio = float(np.median(t / base))
+            out[f"{name}_ratio"] = ratio
+            derived = f"{1.0 / ratio:.2f}x_vs_all"
+        print(f"probe_{name}_c{cohort_n},{us:.1f},{derived}")
+        out[f"{name}_us"] = us
+    return out
 
 
 def full_round_benchmarks(cohort_n: int = 8, rounds: int = 4) -> dict:

@@ -17,9 +17,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 
+from repro.api import Experiment
 from repro.ckpt import latest_step, restore_checkpoint, save_checkpoint
-from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
-from repro.core.server import FLServer
+from repro.configs.base import RuntimeConfig, get_arch, reduced
 from repro.data.pretrain import pretrain
 from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
 from repro.models.model import Model, count_params
@@ -66,11 +66,14 @@ def main():
                           lr=3e-3, verbose=True)
         start = 0
 
-    fl = FLConfig(n_clients=args.clients, cohort_size=args.cohort,
-                  rounds=args.rounds, local_steps=args.local_steps,
-                  lr=args.lr, batch_size=16, strategy=args.strategy,
-                  budget=args.budget, lam=args.lam)
-    server = FLServer(model, fl, data)
+    # the Experiment front door resolves the strategy from the registry
+    # (unknown names fail fast with a did-you-mean) and builds the engine;
+    # the explicit run_round loop below owns checkpointing
+    exp = Experiment(model, data, args.strategy,
+                     cohort_size=args.cohort, rounds=args.rounds,
+                     local_steps=args.local_steps, lr=args.lr,
+                     batch_size=16, budget=args.budget, lam=args.lam)
+    server = exp.build()
 
     from repro.core.server import History
     hist = History()

@@ -1,43 +1,46 @@
-"""Quickstart: selective layer fine-tuning in FL in ~40 lines.
+"""Quickstart: selective layer fine-tuning in FL through the federation API.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The three pluggable pieces (DESIGN.md §6): a model config, a Task
+(datasource), and a registered Strategy name — composed by
+``repro.api.Experiment``, the front door for every example and benchmark.
 """
-import sys, os
+import os
+import sys
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-
-from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
-from repro.core.server import FLServer
-from repro.data.pretrain import pretrain
+from repro.api import Experiment
+from repro.configs.base import get_arch, reduced
 from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
-from repro.models.model import Model
+
+SMOKE = os.environ.get("REPRO_SMOKE") == "1"     # CI smoke: tiny run
 
 
 def main():
     # 1. A reduced assigned architecture (CPU-sized smoke variant).
     cfg = reduced(get_arch("xlm-roberta-base"), n_layers=4, d_model=64)
-    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=32))
 
     # 2. A synthetic federated task with feature skew (DomainNet-style).
-    data = SyntheticFederatedData(FederatedTaskConfig(
+    #    Any object implementing repro.api.Task plugs in here — see
+    #    repro.api.task.DirichletTokenMixtureTask for a second datasource.
+    task = SyntheticFederatedData(FederatedTaskConfig(
         n_clients=20, vocab_size=cfg.vocab_size, seq_len=16,
         skew="feature", objective="classification", signal=0.8,
         domain_strength=0.4))
 
-    # 3. "Pretrained foundation model" stand-in (DESIGN.md §2).
-    params = pretrain(model, model.init(jax.random.PRNGKey(0)), data,
-                      steps=150, lr=3e-3, verbose=True)
-
-    # 4. Algorithm 1 with the paper's strategy: each client fine-tunes its
-    #    best R=1 layer, selections regulated by λ.  The vectorized engine
-    #    runs the whole cohort as one fused XLA program per round;
-    #    engine="sequential" is the paper-literal per-client oracle (both
-    #    produce identical masks and params — tests/test_round_engine.py).
-    fl = FLConfig(n_clients=20, cohort_size=5, rounds=10, local_steps=2,
-                  lr=0.01, batch_size=16, strategy="ours", budget=1, lam=1.0)
-    server = FLServer(model, fl, data, engine="vectorized")
-    params, hist = server.run(params, verbose=True)
+    # 3. Algorithm 1 with the paper's strategy ("ours" = the (P1) solver):
+    #    each client fine-tunes its best R=1 layer, selections regulated by
+    #    λ.  Any registered strategy name works — see
+    #    repro.api.strategy_names() and examples/custom_strategy.py.
+    #    pretrain_steps builds the "pretrained foundation model" stand-in
+    #    (DESIGN.md §2) before the federated rounds.
+    exp = Experiment(cfg, task, strategy="ours",
+                     cohort_size=5, rounds=3 if SMOKE else 10,
+                     local_steps=2, lr=0.01, batch_size=16, budget=1,
+                     lam=1.0, pretrain_steps=30 if SMOKE else 150)
+    params, hist = exp.run(verbose=True)
 
     print("\nsummary:", hist.summary())
     print("per-layer selection counts by round:\n", hist.selection_heatmap())

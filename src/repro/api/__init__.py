@@ -1,0 +1,37 @@
+"""Pluggable federation API: Strategy registry, Task protocol, Experiment.
+
+Three composable protocols (DESIGN.md §6):
+
+* **Strategy** (``repro.api.strategy``) — layer selection as a registered,
+  swappable component with declared probe requirements.
+* **Task** (``repro.api.task``) — the datasource seam: cohort batch
+  sampling, held-out eval, per-client sizes, plus plan-stage
+  availability/straggler hooks.
+* **Experiment** (``repro.api.experiment``) — the front door that wires a
+  model, a task and a strategy into a round engine.
+
+``Experiment`` is imported lazily (PEP 562): ``repro.core.server`` imports
+the strategy registry at module level, and ``experiment`` imports the
+server back — resolving it on first attribute access breaks the cycle.
+"""
+from repro.api.strategy import (PROBE_KEYS, MixtureStrategy,  # noqa: F401
+                                ProbeReport, ScoreStrategy, SelectionContext,
+                                Strategy, UnknownStrategyError, get_strategy,
+                                register_strategy, strategy_names)
+from repro.api.task import (DirichletTaskConfig,  # noqa: F401
+                            DirichletTokenMixtureTask, Task)
+
+__all__ = [
+    "PROBE_KEYS", "ProbeReport", "SelectionContext", "Strategy",
+    "ScoreStrategy", "MixtureStrategy", "UnknownStrategyError",
+    "register_strategy", "get_strategy", "strategy_names",
+    "Task", "DirichletTaskConfig", "DirichletTokenMixtureTask",
+    "Experiment",
+]
+
+
+def __getattr__(name):
+    if name == "Experiment":
+        from repro.api.experiment import Experiment
+        return Experiment
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,104 @@
+"""Experiment: the composable front door of the federation API.
+
+    from repro.api import Experiment
+    from repro.api.task import DirichletTaskConfig, DirichletTokenMixtureTask
+
+    exp = Experiment(model_cfg, task, strategy="ours",
+                     cohort_size=8, rounds=20, budget=2)
+    params, history = exp.run(verbose=True)
+
+``Experiment`` wires the three protocols together — a model (ArchConfig or
+an already-built Model), a :class:`repro.api.task.Task`, and a strategy
+(registered name or Strategy instance, including per-client
+:class:`~repro.api.strategy.MixtureStrategy` objects) — and builds the
+round engine (``engine="vectorized" | "sequential"``).  FL hyper-parameters
+come from an explicit ``fl=FLConfig(...)`` or keyword overrides
+(``rounds=...``, ``budget=...``, ...); ``n_clients`` always follows the
+task.  ``FLServer(model, fl, data)`` with a string strategy remains the
+thin back-compat construction path and produces bit-identical rounds
+(pinned in tests/test_api.py).
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Any, Optional, Union
+
+import jax
+import numpy as np
+
+from repro.api.strategy import Strategy, get_strategy
+from repro.api.task import Task
+from repro.configs.base import ArchConfig, FLConfig, RuntimeConfig
+from repro.core.server import FLServer, History
+from repro.models.model import Model
+
+PyTree = Any
+
+
+class Experiment:
+    """Builder for a federated fine-tuning run over the pluggable API."""
+
+    def __init__(self, model: Union[ArchConfig, Model], task: Task,
+                 strategy: Union[str, Strategy] = "ours", *,
+                 fl: Optional[FLConfig] = None,
+                 runtime: Optional[RuntimeConfig] = None,
+                 engine: str = "vectorized",
+                 pipeline: Optional[bool] = None,
+                 pretrain_steps: int = 0, pretrain_lr: float = 3e-3,
+                 seed: Optional[int] = None,
+                 **fl_overrides):
+        if isinstance(model, Model):
+            self.model = model
+        else:
+            self.model = Model(model, runtime
+                               or RuntimeConfig(remat=False, seq_chunk=32))
+        self.task = task
+        self.strategy = get_strategy(strategy)
+        n_clients = len(np.asarray(task.sizes))
+        fl = fl if fl is not None else FLConfig()
+        changes = dict(fl_overrides, n_clients=n_clients)
+        if seed is not None:
+            changes["seed"] = seed
+        # keep the record/back-compat string in sync with the resolved
+        # strategy object (mixtures report their synthetic 'mixture' name)
+        changes["strategy"] = self.strategy.name
+        self.fl = replace(fl, **changes)
+        if self.fl.cohort_size > n_clients:
+            self.fl = replace(self.fl, cohort_size=n_clients)
+        self.engine = engine
+        self.pipeline = pipeline
+        self.pretrain_steps = pretrain_steps
+        self.pretrain_lr = pretrain_lr
+        self._server: Optional[FLServer] = None
+
+    # ------------------------------------------------------------------
+    def build(self) -> FLServer:
+        """Construct (once) and return the round engine."""
+        if self._server is None:
+            self._server = FLServer(self.model, self.fl, self.task,
+                                    engine=self.engine,
+                                    pipeline=self.pipeline,
+                                    strategy=self.strategy)
+        return self._server
+
+    @property
+    def server(self) -> FLServer:
+        return self.build()
+
+    def init_params(self) -> PyTree:
+        """Fresh params; pretrains the foundation-model stand-in when
+        ``pretrain_steps > 0`` (requires the task's ``pretrain_batch``)."""
+        params = self.model.init(jax.random.PRNGKey(self.fl.seed))
+        if self.pretrain_steps > 0:
+            from repro.data.pretrain import pretrain
+            params = pretrain(self.model, params, self.task,
+                              steps=self.pretrain_steps, lr=self.pretrain_lr)
+        return params
+
+    def run(self, params: Optional[PyTree] = None,
+            rounds: Optional[int] = None,
+            verbose: bool = False) -> tuple[PyTree, History]:
+        """Run Algorithm 1 for ``rounds`` (default ``fl.rounds``)."""
+        if params is None:
+            params = self.init_params()
+        return self.build().run(params, rounds=rounds, verbose=verbose)

@@ -1,0 +1,202 @@
+"""Task protocol: the datasource seam of the federation API.
+
+A *Task* is anything the round engines can federate over.  The required
+surface (structural — no inheritance needed) is:
+
+* ``sizes`` — (n_clients,) int array of per-client dataset sizes d_i
+  (Eq. 1's α_i = d_i / Σ d_j are derived from these);
+* ``cohort_batches(cohort, batch_size, n)`` — stacked host batches with
+  leading ``(len(cohort), n)`` axes, drawn from each member's stream;
+* ``test_batch(batch_size=None)`` — the held-out eval batch.  Must be
+  deterministic across calls (draw the set once, return a fixed slice):
+  the streaming pipeline fetches it once per run, while the synchronous
+  loop calls it every round — a per-call-random implementation would make
+  the two documented-identical paths diverge.
+
+Optional plan-stage hooks (consumed by ``FLServer.plan_round``):
+
+* ``available_clients(t, rng) -> ids`` — the pool the round-t cohort is
+  drawn from (cross-device FL: only a fraction of clients is reachable in
+  any round).  Return None/omit for full availability.
+* ``drop_stragglers(t, cohort, rng) -> keep_mask`` — boolean mask over the
+  drawn cohort; members marked False fail to report this round and are
+  dropped before probing/budgeting (the engine never drops everyone).
+
+Optional extras some drivers use: ``client_batch(i, batch_size)`` and
+``pretrain_batch(batch_size)`` (the foundation-model stand-in,
+``data/pretrain.py``), and ``alpha`` (population data ratios).
+
+``SyntheticFederatedData`` implements the protocol as-is;
+:class:`DirichletTokenMixtureTask` below is a second, independent
+implementation proving the seam — a Dirichlet-partitioned topic-mixture
+text task with built-in availability windows and stragglers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class Task(Protocol):
+    """Structural datasource protocol for the round engines."""
+
+    sizes: np.ndarray
+
+    def cohort_batches(self, cohort, batch_size: int, n: int) -> dict: ...
+
+    def test_batch(self, batch_size: Optional[int] = None) -> dict: ...
+
+
+@dataclass
+class DirichletTaskConfig:
+    """A Dirichlet-partitioned token-mixture task (non-IID text analogue).
+
+    Each of ``n_topics`` topics owns a token distribution; client i's topic
+    weights are drawn from Dirichlet(α) — the standard partition protocol
+    the paper's CIFAR-10 split uses, here over topics instead of labels.
+    A sample draws its topic from the client's weights, its label *is* the
+    topic, and ``signal`` of the positions carry topic-conditional tokens.
+    """
+
+    n_clients: int = 32
+    n_topics: int = 8
+    vocab_size: int = 512
+    seq_len: int = 32
+    samples_per_client: int = 64
+    dirichlet_alpha: float = 0.5
+    objective: str = "classification"     # classification | lm
+    test_samples: int = 256
+    seed: int = 0
+    signal: float = 0.7
+    # --- plan-stage heterogeneity hooks -------------------------------
+    # fraction of clients reachable per round (1.0 = everyone, no hook
+    # effect); the available pool is a deterministic rotating window, so
+    # tests can recompute it
+    availability: float = 1.0
+    # probability a drawn cohort member fails to report (straggler drop)
+    straggler_rate: float = 0.0
+
+
+class DirichletTokenMixtureTask:
+    """Second Task implementation (independent of SyntheticFederatedData)."""
+
+    def __init__(self, cfg: DirichletTaskConfig):
+        self.cfg = cfg
+        rng = np.random.RandomState(cfg.seed)
+        K, V = cfg.n_topics, cfg.vocab_size
+
+        # topic-conditional token distributions: each topic prefers a band
+        logits = rng.randn(K, V) * 0.5
+        for k in range(K):
+            logits[k, np.arange(V) % K == k] += 3.0
+        probs = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+        cdf = np.cumsum(probs, axis=1)
+        self._topic_cdf = cdf / cdf[:, -1:]
+
+        # Dirichlet partition: per-client topic weights
+        self.client_topic_p = rng.dirichlet(
+            np.full(K, cfg.dirichlet_alpha), size=cfg.n_clients)
+        tcdf = np.cumsum(self.client_topic_p, axis=1)
+        self._client_cdf = tcdf / tcdf[:, -1:]
+
+        self.sizes = np.maximum(
+            (cfg.samples_per_client *
+             np.exp(rng.randn(cfg.n_clients) * 0.3)).astype(int), 8)
+        self._rngs = [np.random.RandomState(cfg.seed * 977 + 13 * i + 5)
+                      for i in range(cfg.n_clients)]
+        self._heldout_rng = np.random.RandomState(cfg.seed + 131071)
+        self._pretrain_rng = np.random.RandomState(cfg.seed + 524287)
+        self._test_set: Optional[dict] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def n_clients(self) -> int:
+        return self.cfg.n_clients
+
+    @property
+    def alpha(self) -> np.ndarray:
+        return self.sizes / self.sizes.sum()
+
+    # -- sampling --------------------------------------------------------
+    def _draw(self, rng: np.random.RandomState, topic_cdf_row: np.ndarray,
+              n: int) -> dict:
+        cfg = self.cfg
+        y = np.searchsorted(topic_cdf_row, rng.random_sample(n),
+                            side="right").astype(np.int64)
+        sig = rng.random_sample((n, cfg.seq_len))
+        u = rng.random_sample((n, cfg.seq_len))
+        noise = rng.randint(0, cfg.vocab_size, (n, cfg.seq_len))
+        topical = np.empty((n, cfg.seq_len), np.int64)
+        for k in np.unique(y):
+            m = y == k
+            topical[m] = np.searchsorted(self._topic_cdf[k], u[m],
+                                         side="right")
+        toks = np.where(sig < cfg.signal, topical, noise).astype(np.int32)
+        batch = {"tokens": toks}
+        if cfg.objective == "classification":
+            batch["label"] = y.astype(np.int32)
+        return batch
+
+    def client_batch(self, i: int, batch_size: int) -> dict:
+        return self._draw(self._rngs[i], self._client_cdf[i], batch_size)
+
+    def client_batches(self, i: int, batch_size: int, n: int) -> dict:
+        flat = self._draw(self._rngs[i], self._client_cdf[i], n * batch_size)
+        return {k: v.reshape((n, batch_size) + v.shape[1:])
+                for k, v in flat.items()}
+
+    def cohort_batches(self, cohort, batch_size: int, n: int) -> dict:
+        per = [self.client_batches(int(i), batch_size, n) for i in cohort]
+        return {k: np.stack([b[k] for b in per]) for k in per[0]}
+
+    def pretrain_batch(self, batch_size: int) -> dict:
+        """Balanced topic mixture — the 'pretraining corpus' stand-in."""
+        uniform = np.linspace(1 / self.cfg.n_topics, 1.0, self.cfg.n_topics)
+        return self._draw(self._pretrain_rng, uniform, batch_size)
+
+    def test_batch(self, batch_size: Optional[int] = None) -> dict:
+        cfg = self.cfg
+        n = batch_size or cfg.test_samples
+        if n > cfg.test_samples:
+            raise ValueError(f"test_batch({n}) exceeds the fixed held-out "
+                             f"set (test_samples={cfg.test_samples})")
+        if self._test_set is None:
+            rng = self._heldout_rng
+            owners = rng.choice(cfg.n_clients, size=cfg.test_samples,
+                                p=self.alpha)
+            outs = {}
+            for i in np.unique(owners):
+                m = owners == i
+                outs[int(i)] = (m, self._draw(rng, self._client_cdf[i],
+                                              int(m.sum())))
+            sample = next(iter(outs.values()))[1]
+            merged = {k: np.empty((cfg.test_samples,) + v.shape[1:], v.dtype)
+                      for k, v in sample.items()}
+            for m, b in outs.values():
+                for k in merged:
+                    merged[k][m] = b[k]
+            self._test_set = merged
+        return {k: v[:n] for k, v in self._test_set.items()}
+
+    # -- plan-stage hooks ------------------------------------------------
+    def available_pool(self, t: int) -> np.ndarray:
+        """The deterministic rotating availability window for round t."""
+        cfg = self.cfg
+        n = cfg.n_clients
+        k = max(1, int(round(n * cfg.availability)))
+        start = (t * max(1, n // 4)) % n
+        return (start + np.arange(k)) % n
+
+    def available_clients(self, t: int, rng: np.random.RandomState):
+        if self.cfg.availability >= 1.0:
+            return None                     # full availability: no hook effect
+        return self.available_pool(t)
+
+    def drop_stragglers(self, t: int, cohort: np.ndarray,
+                        rng: np.random.RandomState) -> np.ndarray:
+        if self.cfg.straggler_rate <= 0.0:
+            return np.ones(len(cohort), bool)
+        return rng.random_sample(len(cohort)) >= self.cfg.straggler_rate

@@ -3,5 +3,24 @@ from repro.core.masks import (aggregation_weights, chi_divergence,  # noqa: F401
                               mask_from_indices, per_layer_sq_norms, union_mask)
 from repro.core.solver import solve_icm, solve_unified, objective  # noqa: F401
 from repro.core.strategies import ALL_STRATEGIES, ProbeReport, select  # noqa: F401
-from repro.core.server import FLServer, History  # noqa: F401
-from repro.core.client import Client  # noqa: F401
+
+__all__ = [
+    "aggregation_weights", "chi_divergence", "mask_from_indices",
+    "per_layer_sq_norms", "union_mask", "solve_icm", "solve_unified",
+    "objective", "ALL_STRATEGIES", "ProbeReport", "select",
+    "FLServer", "History", "Client",
+]
+
+
+def __getattr__(name):
+    # Lazy (PEP 562): the strategy registry (repro.api.strategy) imports
+    # repro.core.solver/strategies at module level, and the server imports
+    # the registry back — resolving the server side on first access keeps
+    # both import orders cycle-free.
+    if name in ("FLServer", "History"):
+        from repro.core import server
+        return getattr(server, name)
+    if name == "Client":
+        from repro.core.client import Client
+        return Client
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -17,6 +17,12 @@ Two execution granularities share the same per-client math:
   updated params; the streaming round pipeline (core/server.py) uses it
   when every round re-selects (``selection_period == 1``).
 
+Probes are requirement-trimmed: every probe entry point takes a static
+``reqs`` tuple (the strategy's declared ``probe_requirements``) and
+computes only those stats, plus an optional static ``score_fn`` — a
+strategy's device-side scoring fused into the same XLA program
+(repro.api.strategy, DESIGN.md §6).
+
 Jit caches are hoisted out of ``Client`` instances into a module-level
 cache keyed on ``(ArchConfig, RuntimeConfig)`` (both frozen/hashable), so
 benchmark sweeps and multi-server runs that rebuild ``FLServer``/``Client``
@@ -35,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import masks as M
+from repro.core.strategies import PROBE_KEYS
 from repro.models.model import Model, apply_layer_mask
 
 Array = jax.Array
@@ -44,10 +51,6 @@ PyTree = Any
 # -- module-level jit suite cache -------------------------------------------
 _JIT_CACHE: dict = {}
 _JIT_STATS = {"hits": 0, "misses": 0, "uncached": 0}
-
-_SUITE_NAMES = ("local_update", "probe", "eval", "cohort_update",
-                "probe_cohort", "probe_update_cohort")
-
 
 def jit_cache_stats() -> dict:
     """Hit/miss counters + entry count for the shared jit suite cache."""
@@ -60,9 +63,11 @@ def clear_jit_cache() -> None:
         _JIT_STATS[k] = 0
 
 
-# name ↔ position mapping for the 4-tuple every probe impl returns
-# (sq, mean, var, p_sq) — the single source of truth for stat dicts
 def probe_stats_dict(stats) -> dict[str, np.ndarray]:
+    """Materialise a probe result to host numpy.  Accepts the stat dict the
+    probe impls return, or the legacy (sq, mean, var, p_sq) 4-tuple."""
+    if isinstance(stats, dict):
+        return {k: np.asarray(v) for k, v in stats.items()}
     sq, mean, var, p_sq = stats
     return {"grad_sq_norms": np.asarray(sq), "grad_means": np.asarray(mean),
             "grad_vars": np.asarray(var), "param_sq_norms": np.asarray(p_sq)}
@@ -81,13 +86,19 @@ class Client:
                else (model.cfg, model.runtime))
         suite = _JIT_CACHE.get(key) if key is not None else None
         if suite is None:
+            # probe entries take static (reqs, score_fn) tail args: jax
+            # caches one trace per distinct requirement set / score fn, so
+            # requirement-trimmed probes and fused device scoring share the
+            # same suite entry (strategy singletons keep identities stable)
             suite = {
                 "local_update": jax.jit(self._local_update_impl),
-                "probe": jax.jit(self._probe_impl),
+                "probe": jax.jit(self._probe_impl, static_argnums=(2, 3)),
                 "eval": jax.jit(self._eval_impl),
                 "cohort_update": jax.jit(self._cohort_update_impl),
-                "probe_cohort": jax.jit(self._probe_cohort_impl),
-                "probe_update_cohort": jax.jit(self._probe_update_cohort_impl),
+                "probe_cohort": jax.jit(self._probe_cohort_impl,
+                                        static_argnums=(2, 3)),
+                "probe_update_cohort": jax.jit(self._probe_update_cohort_impl,
+                                               static_argnums=(6, 7)),
             }
             if key is None:
                 _JIT_STATS["uncached"] += 1
@@ -165,59 +176,90 @@ class Client:
         return new_params, np.asarray(losses)
 
     # -- selection probe: layer-wise gradient stats on one batch ------------
-    def _probe_impl(self, params: PyTree, batch: PyTree):
+    def _probe_impl(self, params: PyTree, batch: PyTree,
+                    reqs: tuple = PROBE_KEYS, score_fn=None):
+        """Gradient stats for one batch, trimmed to the requested keys.
+
+        ``reqs`` (static) is the strategy's ``probe_requirements``: only the
+        requested stats are computed — SNR-only strategies skip the param
+        norms, ``ours`` skips mean/var entirely (a cheaper reduction).  Keys
+        not requested are never part of the program (XLA sees only the
+        returned outputs).
+        """
         g = jax.grad(self.model.loss)(params, batch)
-        sq, mean, var = M.per_layer_stats(g, self.cfg)
-        p_sq = M.per_layer_param_sq_norms(params, self.cfg)
-        return sq, mean, var, p_sq
+        out: dict[str, Array] = {}
+        if "grad_means" in reqs or "grad_vars" in reqs:
+            sq, mean, var = M.per_layer_stats(g, self.cfg)
+            out["grad_sq_norms"] = sq
+            out["grad_means"] = mean
+            out["grad_vars"] = var
+        elif "grad_sq_norms" in reqs:
+            out["grad_sq_norms"] = M.per_layer_sq_norms(g, self.cfg)
+        if "param_sq_norms" in reqs:
+            out["param_sq_norms"] = M.per_layer_param_sq_norms(params,
+                                                               self.cfg)
+        return {k: v for k, v in out.items() if k in reqs}
 
-    def probe(self, params, batch) -> dict[str, np.ndarray]:
-        return probe_stats_dict(self._probe(params, batch))
+    def probe(self, params, batch,
+              reqs: tuple = PROBE_KEYS) -> dict[str, np.ndarray]:
+        return probe_stats_dict(self._probe(params, batch, tuple(reqs), None))
 
-    def _probe_cohort_impl(self, params: PyTree, batches: PyTree):
+    def _probe_cohort_impl(self, params: PyTree, batches: PyTree,
+                           reqs: tuple = PROBE_KEYS, score_fn=None):
         def one_client(cb):
-            sq, mean, var, p_sq = jax.vmap(
-                lambda b: self._probe_impl(params, b))(cb)
+            outs = jax.vmap(lambda b: self._probe_impl(params, b, reqs))(cb)
             # mean over the selection_batches axis == the sequential
             # accumulate-then-divide in FLServer.probe_round
-            return sq.mean(0), mean.mean(0), var.mean(0), p_sq.mean(0)
+            return {k: v.mean(0) for k, v in outs.items()}
 
-        return jax.vmap(one_client)(batches)
+        stats = jax.vmap(one_client)(batches)
+        if score_fn is not None:
+            # strategy's device-side scoring fused into the same program;
+            # applied to the *meaned* stats, exactly like the host path
+            stats = dict(stats, scores=score_fn(stats))
+        return stats
 
-    def probe_cohort_raw(self, params, batches):
+    def probe_cohort_raw(self, params, batches, reqs: tuple = PROBE_KEYS,
+                         score_fn=None):
         """Async variant of :meth:`probe_cohort` (device arrays)."""
-        return self._probe_cohort(params, batches)
+        return self._probe_cohort(params, batches, tuple(reqs), score_fn)
 
-    def probe_cohort(self, params, batches) -> dict[str, np.ndarray]:
+    def probe_cohort(self, params, batches, reqs: tuple = PROBE_KEYS,
+                     score_fn=None) -> dict[str, np.ndarray]:
         """Batched probe: one vmapped grad+stats call over the whole cohort.
 
         batches: pytree with leading (cohort, selection_batches) axes.
-        Returns (cohort, L) stat arrays, same keys as :meth:`probe`.
+        Returns (cohort, L) arrays for the requested stat keys (plus
+        ``"scores"`` when a device score_fn is fused in).
         """
-        return probe_stats_dict(self._probe_cohort(params, batches))
+        return probe_stats_dict(
+            self._probe_cohort(params, batches, tuple(reqs), score_fn))
 
     # -- fused probe+update: one program per round ---------------------------
     def _probe_update_cohort_impl(self, params: PyTree, batches: PyTree,
                                   masks: Array, sizes: Array, lr: Array,
-                                  probe_batches: PyTree):
+                                  probe_batches: PyTree,
+                                  reqs: tuple = PROBE_KEYS, score_fn=None):
         new_params, losses = self._cohort_update_impl(params, batches, masks,
                                                       sizes, lr)
         # next round's selection probe, on the *updated* params — identical
         # math to dispatching probe_cohort(new_params, ...) separately
-        stats = self._probe_cohort_impl(new_params, probe_batches)
+        stats = self._probe_cohort_impl(new_params, probe_batches, reqs,
+                                        score_fn)
         return new_params, losses, stats
 
     def probe_update_cohort_raw(self, params, batches, masks, sizes, lr,
-                                probe_batches):
+                                probe_batches, reqs: tuple = PROBE_KEYS,
+                                score_fn=None):
         """Cohort update + next-round probe as ONE XLA program (async).
 
         probe_batches: (next_cohort, selection_batches, ...) pytree.  Returns
-        (new_params, losses, (sq, mean, var, p_sq)) device arrays.
+        (new_params, losses, stats-dict) device arrays.
         """
         return self._probe_update_cohort(
             params, batches, jnp.asarray(masks, jnp.float32),
             jnp.asarray(sizes, jnp.float32), jnp.asarray(lr, jnp.float32),
-            probe_batches)
+            probe_batches, tuple(reqs), score_fn)
 
     # -- evaluation -----------------------------------------------------------
     def _eval_impl(self, params: PyTree, batch: PyTree):

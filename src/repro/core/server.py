@@ -39,6 +39,14 @@ every round from the *current* cohort's cached stats and budgets; cohort
 members without cached stats are probed on demand.  (The previous
 implementation reused the first ``len(cohort)`` mask rows computed for a
 different cohort — wrong budgets and wrong clients.)
+
+Pluggable seams (DESIGN.md §6): the strategy is resolved from the registry
+(``fl.strategy`` string or a ``Strategy`` instance via the ``strategy``
+kwarg) — its declared ``probe_requirements`` trim what the probes compute,
+and score-based strategies fuse their device-side scoring into the
+vectorized probe program.  ``data`` is any ``repro.api.Task``; its optional
+``available_clients`` / ``drop_stragglers`` hooks act at the plan stage.
+New code should construct servers through ``repro.api.Experiment``.
 """
 from __future__ import annotations
 
@@ -49,16 +57,17 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.api.strategy import SelectionContext, Strategy, get_strategy
 from repro.configs.base import FLConfig
 from repro.core import aggregation as agg
 from repro.core import masks as M
 from repro.core.client import Client, probe_stats_dict
-from repro.core.strategies import ProbeReport, select
-from repro.data.synthetic import SyntheticFederatedData
+from repro.core.strategies import ProbeReport
 from repro.models.model import Model
 
 PyTree = Any
 
+# kept for back-compat; the engines now consult Strategy.probe_requirements
 PROBE_STRATEGIES = ("snr", "rgn", "ours", "ours_unified")
 
 
@@ -132,10 +141,11 @@ ENGINES = ("vectorized", "sequential")
 
 class FLServer:
     def __init__(self, model: Model, fl: FLConfig,
-                 data: SyntheticFederatedData,
+                 data: "Task",
                  rng: Optional[np.random.RandomState] = None,
                  engine: str = "vectorized",
-                 pipeline: Optional[bool] = None):
+                 pipeline: Optional[bool] = None,
+                 strategy: "Optional[Strategy | str]" = None):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
         self.model = model
@@ -149,9 +159,30 @@ class FLServer:
         self.pipeline = (engine == "vectorized") if pipeline is None else pipeline
         self.L = model.n_selectable
         self.layer_costs = None      # optional per-layer cost vector for (P1)
+        # registry-resolved strategy (fl.strategy is the back-compat string
+        # path; a Strategy instance or name passed here takes precedence)
+        self.strategy = get_strategy(strategy if strategy is not None
+                                     else fl.strategy)
+        unknown = set(self.strategy.probe_requirements) - set(ProbeReport.KEYS)
+        if unknown:
+            raise ValueError(
+                f"strategy {self.strategy.name!r} declares unknown "
+                f"probe_requirements {sorted(unknown)}; the probe computes "
+                f"{ProbeReport.KEYS}")
+        # the probe computes only what the strategy declared it needs
+        self._probe_reqs = tuple(k for k in ProbeReport.KEYS
+                                 if k in self.strategy.probe_requirements)
+        # device-side scoring fuses into the vectorized probe program; the
+        # sequential oracle scores the uploaded stats on the host instead
+        self._score_fn = (self.strategy.device_score_fn()
+                          if engine == "vectorized" else None)
         # per-client-id probe stats (selection_period > 1); cleared at refresh
         self._stats_cache: dict[int, dict[str, np.ndarray]] = {}
         self._layer_params: Optional[np.ndarray] = None
+
+    @property
+    def needs_probe(self) -> bool:
+        return bool(self._probe_reqs)
 
     # -- stage 1: plan ---------------------------------------------------
     def _budgets(self, cohort: np.ndarray) -> np.ndarray:
@@ -159,7 +190,7 @@ class FLServer:
 
     def _plan_for(self, cohort: np.ndarray, t: int) -> RoundPlan:
         fl = self.fl
-        needs_probe = fl.strategy in PROBE_STRATEGIES
+        needs_probe = self.needs_probe
         refresh = needs_probe and t % fl.selection_period == 0
         if refresh:
             probe_ids = np.asarray(cohort)
@@ -174,8 +205,29 @@ class FLServer:
                          refresh=refresh)
 
     def plan_round(self, t: int) -> RoundPlan:
-        cohort = self.rng.choice(self.fl.n_clients, size=self.fl.cohort_size,
-                                 replace=False)
+        """Draw the round-t cohort, honouring the task's plan-stage hooks.
+
+        Tasks may expose ``available_clients(t, rng) -> ids`` (per-round
+        availability: the cohort is drawn from the returned pool) and
+        ``drop_stragglers(t, cohort, rng) -> keep-mask`` (members that fail
+        to report this round are dropped before probing/budgeting).  Tasks
+        without hooks — e.g. ``SyntheticFederatedData`` — consume the server
+        rng exactly as before, so seeds and parity are unchanged.
+        """
+        avail = getattr(self.data, "available_clients", None)
+        pool = avail(t, self.rng) if callable(avail) else None
+        if pool is None:                 # full availability: legacy rng path
+            cohort = self.rng.choice(self.fl.n_clients,
+                                     size=self.fl.cohort_size, replace=False)
+        else:
+            pool = np.asarray(pool)
+            k = min(self.fl.cohort_size, len(pool))
+            cohort = pool[self.rng.choice(len(pool), size=k, replace=False)]
+        drop = getattr(self.data, "drop_stragglers", None)
+        if callable(drop):
+            keep = np.asarray(drop(t, cohort, self.rng), bool)
+            if keep.any():               # never drop the whole cohort
+                cohort = cohort[keep]
         return self._plan_for(cohort, t)
 
     # -- stage 2: sample (host; prefetchable) ----------------------------
@@ -199,7 +251,8 @@ class FLServer:
         if sampled.probe_batches is None:
             return None
         if self.engine == "vectorized":
-            return self.client.probe_cohort(params, sampled.probe_batches)
+            return self.client.probe_cohort(params, sampled.probe_batches,
+                                            self._probe_reqs, self._score_fn)
         nb = self.fl.selection_batches
         rows: list[dict[str, np.ndarray]] = []
         for r in range(len(sampled.plan.probe_ids)):
@@ -207,7 +260,7 @@ class FLServer:
             for b in range(nb):
                 batch = jax.tree.map(lambda x, r=r, b=b: x[r, b],
                                      sampled.probe_batches)
-                out = self.client.probe(params, batch)
+                out = self.client.probe(params, batch, self._probe_reqs)
                 acc = out if acc is None else {k: acc[k] + out[k] for k in out}
             rows.append({k: v / nb for k, v in acc.items()})
         return {k: np.stack([r[k] for r in rows]) for k in rows[0]}
@@ -220,15 +273,17 @@ class FLServer:
             self._stats_cache.clear()
         if stats is not None:
             for r, i in enumerate(plan.probe_ids):
-                self._stats_cache[int(i)] = {k: stats[k][r] for k in
-                                             ProbeReport.KEYS}
-        if fl.strategy in PROBE_STRATEGIES:
+                self._stats_cache[int(i)] = {k: v[r] for k, v in stats.items()}
+        if self.needs_probe:
             probe = ProbeReport.from_rows(
                 [self._stats_cache[int(i)] for i in plan.cohort])
-            return select(fl.strategy, probe, plan.budgets, lam=fl.lam,
-                          costs=self.layer_costs)
-        probe = ProbeReport(grad_sq_norms=np.zeros((len(plan.cohort), self.L)))
-        return select(fl.strategy, probe, plan.budgets, lam=fl.lam)
+        else:
+            probe = ProbeReport(grad_sq_norms=np.zeros((len(plan.cohort),
+                                                        self.L), np.float32))
+        ctx = SelectionContext(client_ids=np.asarray(plan.cohort),
+                               round=plan.t, lam=fl.lam,
+                               costs=self.layer_costs, n_layers=self.L)
+        return self.strategy.select(probe, plan.budgets, ctx)
 
     def select_masks(self, params: PyTree, cohort: np.ndarray,
                      t: int) -> np.ndarray:
@@ -339,14 +394,15 @@ class FLServer:
         """
         fl = self.fl
         client = self.client
-        needs_probe = fl.strategy in PROBE_STRATEGIES
-        fuse = needs_probe and fl.selection_period == 1
+        reqs, score_fn = self._probe_reqs, self._score_fn
+        fuse = self.needs_probe and fl.selection_period == 1
         self._ensure_layer_params(params)
         test = self.data.test_batch()
 
         plan = self.plan_round(0)
         sampled = self.sample_round(plan)
-        stats_dev = (client.probe_cohort_raw(params, sampled.probe_batches)
+        stats_dev = (client.probe_cohort_raw(params, sampled.probe_batches,
+                                             reqs, score_fn)
                      if sampled.probe_batches is not None else None)
         pending: list = []        # raw entries, or RoundRecords when verbose
 
@@ -366,7 +422,7 @@ class FLServer:
                         nxt_sampled.probe_batches is not None:
                     params, losses, nstats = client.probe_update_cohort_raw(
                         params, sampled.update_batches, masks, plan.sizes,
-                        fl.lr, nxt_sampled.probe_batches)
+                        fl.lr, nxt_sampled.probe_batches, reqs, score_fn)
                 else:
                     params, losses = client.cohort_update_raw(
                         params, sampled.update_batches, masks, plan.sizes,
@@ -384,7 +440,7 @@ class FLServer:
                         # chained on the params future: overlaps the update
                         # on-device, no host round-trip in between
                         nstats = client.probe_cohort_raw(
-                            params, nxt_sampled.probe_batches)
+                            params, nxt_sampled.probe_batches, reqs, score_fn)
             loss_dev, acc_dev = client.evaluate_raw(params, test)
             entry = (plan, masks, losses, loss_dev, acc_dev,
                      time.time() - t0)

@@ -106,3 +106,17 @@ def solve_unified(G: np.ndarray, budgets, *, costs: np.ndarray | None = None):
                 masks[i, l] = 1.0
                 spent += costs[l]
     return masks
+
+
+# Named solver lookup, so host strategies (repro.api.strategy) can be
+# parameterised by solver without hard-wiring callables.
+SOLVERS = {"icm": solve_icm, "unified": solve_unified}
+
+
+def get_solver(name: str):
+    """Resolve a (P1) solver by name ('icm' | 'unified')."""
+    try:
+        return SOLVERS[name]
+    except KeyError:
+        raise ValueError(f"unknown (P1) solver {name!r} "
+                         f"(available: {', '.join(sorted(SOLVERS))})") from None

@@ -1,7 +1,6 @@
-"""Layer-selection strategies (§5.1): the paper's method and all baselines.
+"""Layer-selection probe report + the back-compat ``select`` shim (§5.1).
 
-Every strategy maps a :class:`ProbeReport` (what clients upload at the start
-of a selection round) + per-client budgets → a (cohort, L) mask matrix.
+Strategies themselves live in the registry (``repro.api.strategy``):
 
 * ``top``    — last R layers (near the output) [Kovaleva+19, Lee+19b]
 * ``bottom`` — first R layers (near the input) [Lee+22]
@@ -11,39 +10,79 @@ of a selection round) + per-client budgets → a (cohort, L) mask matrix.
 * ``full``   — all layers (the paper's performance benchmark)
 * ``ours``   — solve (P1) with local gradient norms + λ consistency
   regulariser (solve_icm), the paper's proposed strategy
+* ``ours_unified`` (alias ``unified``) — the λ→∞ fast path
+
+:func:`select` keeps the original string-dispatch signature as a thin shim
+over the registry, so existing callers (and the pinned parity tests) are
+untouched; new code should resolve strategies with
+``repro.api.get_strategy`` and drive them through ``repro.api.Experiment``.
+
+Every strategy maps a :class:`ProbeReport` (what clients upload at the start
+of a selection round) + per-client budgets → a (cohort, L) mask matrix.
+Strategies declare ``probe_requirements`` so clients compute (and upload)
+only the stats actually consumed — a report may therefore carry any subset
+of the stat fields, plus optional device-computed ``scores``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, fields
 from typing import Optional
 
 import numpy as np
 
-from repro.core.solver import solve_icm, solve_unified
+PROBE_KEYS = ("grad_sq_norms", "param_sq_norms", "grad_means", "grad_vars")
 
 
 @dataclass
 class ProbeReport:
-    """Per-cohort probe statistics (rows = cohort clients, cols = layers)."""
-    grad_sq_norms: np.ndarray                 # (n, L): ‖g_{i,l}‖²
+    """Per-cohort probe statistics (rows = cohort clients, cols = layers).
+
+    All fields are optional — a requirements-trimmed probe fills only what
+    the strategy asked for.  ``scores`` holds device-computed per-layer
+    scores when the strategy's scoring fused into the probe program.
+    """
+
+    grad_sq_norms: Optional[np.ndarray] = None    # (n, L): ‖g_{i,l}‖²
     param_sq_norms: Optional[np.ndarray] = None   # (n, L): ‖θ_l‖² (RGN)
     grad_means: Optional[np.ndarray] = None       # (n, L): mean(g_l)  (SNR)
     grad_vars: Optional[np.ndarray] = None        # (n, L): var(g_l)   (SNR)
+    scores: Optional[np.ndarray] = None           # (n, L): fused scores
 
-    KEYS = ("grad_sq_norms", "param_sq_norms", "grad_means", "grad_vars")
+    KEYS = PROBE_KEYS
 
     @classmethod
     def from_rows(cls, rows: "list[dict[str, np.ndarray]]") -> "ProbeReport":
-        """Stack per-client stat dicts (one row per cohort member)."""
-        return cls(**{k: np.stack([r[k] for r in rows]) for k in cls.KEYS})
+        """Stack per-client stat dicts (one row per cohort member).
+
+        Only keys present (and non-None) in *every* row are stacked — rows
+        from a requirements-trimmed probe simply omit the unused stats.
+        """
+        names = [f.name for f in fields(cls)]
+        return cls(**{k: np.stack([r[k] for r in rows]) for k in names
+                      if all(r.get(k) is not None for r in rows)})
+
+    def _shape(self) -> tuple[int, int]:
+        for f in fields(self):
+            v = getattr(self, f.name)
+            if v is not None:
+                return v.shape
+        raise ValueError("empty ProbeReport: no stat field is set")
 
     @property
     def n(self) -> int:
-        return self.grad_sq_norms.shape[0]
+        return self._shape()[0]
 
     @property
     def L(self) -> int:
-        return self.grad_sq_norms.shape[1]
+        return self._shape()[1]
+
+    def take(self, rows) -> "ProbeReport":
+        """Row-subset view (e.g. one mixture member's cohort rows)."""
+        idx = np.asarray(rows)
+        return ProbeReport(**{
+            f.name: (None if getattr(self, f.name) is None
+                     else getattr(self, f.name)[idx])
+            for f in fields(self)})
 
 
 def _positional(n: int, L: int, budgets, mode: str) -> np.ndarray:
@@ -79,26 +118,19 @@ def _score_topk(scores: np.ndarray, budgets) -> np.ndarray:
 def select(strategy: str, probe: ProbeReport, budgets, *,
            lam: float = 10.0, costs: Optional[np.ndarray] = None,
            eps: float = 1e-12) -> np.ndarray:
-    """Return the (cohort, L) mask matrix for the given strategy."""
-    n, L = probe.n, probe.L
-    if strategy == "full":
-        return np.ones((n, L), np.float32)
-    if strategy in ("top", "bottom", "both"):
-        return _positional(n, L, budgets, strategy)
-    if strategy == "snr":
-        assert probe.grad_means is not None and probe.grad_vars is not None
-        snr = np.abs(probe.grad_means) / (probe.grad_vars + eps)
-        return _score_topk(snr, budgets)
-    if strategy == "rgn":
-        assert probe.param_sq_norms is not None
-        rgn = np.sqrt(probe.grad_sq_norms) / (np.sqrt(probe.param_sq_norms) + eps)
-        return _score_topk(rgn, budgets)
-    if strategy == "ours":
-        masks, _, _ = solve_icm(probe.grad_sq_norms, budgets, lam, costs=costs)
-        return masks
-    if strategy == "ours_unified":      # λ→∞ fast path (production default)
-        return solve_unified(probe.grad_sq_norms, budgets, costs=costs)
-    raise ValueError(f"unknown strategy {strategy!r}")
+    """Return the (cohort, L) mask matrix for the given strategy.
+
+    Back-compat shim: delegates to the registry
+    (``repro.api.get_strategy(strategy).select``).  Unknown names raise
+    :class:`repro.api.UnknownStrategyError` with the registered names and a
+    nearest-match suggestion.
+    """
+    from repro.api.strategy import SelectionContext, get_strategy
+    strat = get_strategy(strategy)
+    n = probe.n
+    ctx = SelectionContext(client_ids=np.arange(n), lam=lam, costs=costs,
+                           n_layers=probe.L, eps=eps)
+    return strat.select(probe, budgets, ctx)
 
 
 ALL_STRATEGIES = ("top", "bottom", "both", "snr", "rgn", "ours", "full")

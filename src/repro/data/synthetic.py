@@ -68,7 +68,14 @@ class FederatedTaskConfig:
 
 
 class SyntheticFederatedData:
-    """Generator for per-client batches and a held-out global test set."""
+    """Generator for per-client batches and a held-out global test set.
+
+    Implements the ``repro.api.Task`` protocol (``sizes`` /
+    ``cohort_batches`` / ``test_batch``) consumed by the round engines and
+    ``repro.api.Experiment``; it declares no plan-stage hooks, so cohort
+    draws consume the server rng exactly as before the federation API
+    existed (seed- and parity-stable).
+    """
 
     def __init__(self, cfg: FederatedTaskConfig):
         self.cfg = cfg
@@ -150,6 +157,10 @@ class SyntheticFederatedData:
         self._test_set: Optional[dict] = None
 
     # ------------------------------------------------------------------
+    @property
+    def n_clients(self) -> int:
+        return self.cfg.n_clients
+
     @property
     def alpha(self) -> np.ndarray:
         """Relative sample sizes α_i = d_i / Σ d_j (Eq. 1)."""

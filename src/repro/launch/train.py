@@ -18,8 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
-from repro.core.strategies import ProbeReport, select
+from repro.api.strategy import SelectionContext, get_strategy
+from repro.configs.base import RuntimeConfig, get_arch, reduced
+from repro.core.strategies import ProbeReport
 from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.model import Model
@@ -34,14 +35,20 @@ def main():
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--per-client-batch", type=int, default=4)
-    ap.add_argument("--strategy", default="ours_unified")
+    ap.add_argument("--strategy", default="ours_unified",
+                    help="any registered strategy name (repro.api)")
     ap.add_argument("--budget", type=int, default=2)
+    ap.add_argument("--lam", type=float, default=10.0)
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--data-axis", type=int, default=0,
                     help="0 = use the production mesh (dry-run scale)")
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--production", action="store_true")
     args = ap.parse_args()
+
+    # resolve the strategy up front: unknown names fail fast with the
+    # registered list + nearest-match suggestion
+    strategy = get_strategy(args.strategy)
 
     if args.production:
         mesh = make_production_mesh()
@@ -74,20 +81,23 @@ def main():
     probe_client = Client(Model(cfg, RuntimeConfig(remat=False,
                                                    seq_chunk=max(args.seq, 16))))
 
+    # the strategy's declared probe requirements trim the per-client probe
+    reqs = tuple(k for k in ProbeReport.KEYS
+                 if k in strategy.probe_requirements)
+
     for t in range(args.rounds):
         t0 = time.time()
         host_params = jax.device_get(params)
-        if args.strategy in ("ours", "ours_unified", "rgn", "snr"):
-            rows = [probe_client.probe(host_params, data.client_batch(i, 4))
+        if reqs:
+            rows = [probe_client.probe(host_params, data.client_batch(i, 4),
+                                       reqs)
                     for i in range(clients)]
-            probe = ProbeReport(
-                grad_sq_norms=np.stack([r["grad_sq_norms"] for r in rows]),
-                param_sq_norms=np.stack([r["param_sq_norms"] for r in rows]),
-                grad_means=np.stack([r["grad_means"] for r in rows]),
-                grad_vars=np.stack([r["grad_vars"] for r in rows]))
+            probe = ProbeReport.from_rows(rows)
         else:
             probe = ProbeReport(grad_sq_norms=np.zeros((clients, L)))
-        masks = jnp.asarray(select(args.strategy, probe, args.budget))
+        ctx = SelectionContext(client_ids=np.arange(clients), round=t,
+                               lam=args.lam, n_layers=L)
+        masks = jnp.asarray(strategy.select(probe, args.budget, ctx))
 
         batch_np = np.stack([
             data.client_batch(i, args.per_client_batch)["tokens"]

@@ -1,0 +1,361 @@
+"""Federation API: registry, Task protocol, Experiment builder, mixtures.
+
+Covers the pluggable-API acceptance pins:
+
+* the back-compat shims — ``FLServer(strategy="name")`` and
+  ``strategies.select(name, ...)`` — produce bit-identical masks to the
+  registry/Experiment path;
+* requirements-trimmed probes carry only the stats the strategy declared;
+* ``ProbeReport.from_rows`` handles trimmed rows (regression: np.stack
+  over None);
+* unknown strategies list registered names + a nearest-match suggestion on
+  both the registry and the FLServer shim path;
+* per-client heterogeneous mixtures match running each member strategy on
+  its own rows, with heterogeneous budgets and selection_period > 1;
+* the Dirichlet token-mixture Task and its availability/straggler hooks.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (Experiment, MixtureStrategy, ProbeReport,
+                       ScoreStrategy, SelectionContext, Strategy,
+                       UnknownStrategyError, get_strategy, register_strategy,
+                       strategy_names)
+from repro.api.task import (DirichletTaskConfig, DirichletTokenMixtureTask,
+                            Task)
+from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
+from repro.core.client import Client
+from repro.core.server import FLServer
+from repro.core.strategies import ALL_STRATEGIES, select
+from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
+from repro.models.model import Model
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = reduced(get_arch("xlm_roberta_base"), n_layers=4, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    task = FederatedTaskConfig(
+        n_clients=12, n_classes=10, vocab_size=cfg.vocab_size, seq_len=8,
+        samples_per_client=16, skew="label", objective="classification")
+    return model, params, task
+
+
+def _probe(n=4, L=6, seed=0):
+    rng = np.random.RandomState(seed)
+    return ProbeReport(
+        grad_sq_norms=np.abs(rng.randn(n, L)).astype(np.float32),
+        param_sq_norms=np.abs(rng.randn(n, L)).astype(np.float32) + 1.0,
+        grad_means=rng.randn(n, L).astype(np.float32),
+        grad_vars=np.abs(rng.randn(n, L)).astype(np.float32) + 0.1)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_all_legacy_strategies():
+    names = strategy_names()
+    for s in ALL_STRATEGIES + ("ours_unified", "unified"):
+        assert s in names, s
+
+
+def test_unknown_strategy_lists_names_and_suggests():
+    with pytest.raises(UnknownStrategyError) as ei:
+        get_strategy("rng")
+    msg = str(ei.value)
+    assert "did you mean 'rgn'?" in msg
+    for name in ("ours", "top", "snr"):
+        assert name in msg
+    # back-compat: callers catching either built-in type keep working
+    assert isinstance(ei.value, KeyError) and isinstance(ei.value, ValueError)
+
+
+def test_unknown_strategy_via_select_shim():
+    with pytest.raises(UnknownStrategyError, match="did you mean"):
+        select("borrom", _probe(), 2)
+
+
+def test_unknown_strategy_via_flserver_shim(world):
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=1, strategy="oours")
+    with pytest.raises(UnknownStrategyError, match="did you mean 'ours'?"):
+        FLServer(model, fl, SyntheticFederatedData(task))
+
+
+def test_unknown_probe_requirements_fail_fast(world):
+    """A custom strategy with a misspelled requirement must error at server
+    construction, not silently probe nothing and select on zeros."""
+    model, params, task = world
+
+    class _Typo(Strategy):
+        name = "typo_reqs"
+        probe_requirements = frozenset({"grad_norms"})    # not a probe key
+
+        def select(self, probe, budgets, ctx):            # pragma: no cover
+            return np.zeros((probe.n, probe.L), np.float32)
+
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=1)
+    with pytest.raises(ValueError, match="unknown probe_requirements"):
+        FLServer(model, fl, SyntheticFederatedData(task), strategy=_Typo())
+
+
+def test_register_and_resolve_custom_strategy():
+    @register_strategy("test_only_last")
+    class _Last(Strategy):
+        def select(self, probe, budgets, ctx):
+            masks = np.zeros((probe.n, probe.L), np.float32)
+            masks[:, -1] = 1.0
+            return masks
+
+    strat = get_strategy("test_only_last")
+    masks = strat.select(_probe(), 1, SelectionContext(np.arange(4)))
+    np.testing.assert_array_equal(masks[:, -1], np.ones(4))
+    assert masks.sum() == 4
+
+
+# ---------------------------------------------------------------------------
+# ProbeReport trimming (satellite: from_rows over absent stats)
+# ---------------------------------------------------------------------------
+
+def test_from_rows_with_absent_optional_stats():
+    # regression: np.stack over None crashed when optional stats were
+    # absent; trimmed rows carry only what the strategy requested
+    rows = [{"grad_sq_norms": np.ones(5), "param_sq_norms": None}
+            for _ in range(3)]
+    p = ProbeReport.from_rows(rows)
+    assert p.n == 3 and p.L == 5
+    assert p.param_sq_norms is None and p.grad_means is None
+    # rows missing the key entirely behave the same
+    p2 = ProbeReport.from_rows([{"grad_means": np.zeros(4),
+                                 "grad_vars": np.ones(4)}] * 2)
+    assert p2.n == 2 and p2.L == 4 and p2.grad_sq_norms is None
+
+
+def test_from_rows_mixed_rows_keep_common_keys_only():
+    rows = [{"grad_sq_norms": np.ones(4), "grad_means": np.zeros(4)},
+            {"grad_sq_norms": np.ones(4)}]
+    p = ProbeReport.from_rows(rows)
+    assert p.grad_sq_norms.shape == (2, 4)
+    assert p.grad_means is None
+
+
+def test_empty_probe_report_raises():
+    with pytest.raises(ValueError, match="empty ProbeReport"):
+        ProbeReport().n
+
+
+def test_probe_requirements_trim_client_stats(world):
+    model, params, task = world
+    data = SyntheticFederatedData(task)
+    client = Client(model)
+    batches = data.cohort_batches(np.arange(3), 4, 2)
+    out = client.probe_cohort(params, batches, ("grad_sq_norms",))
+    assert set(out) == {"grad_sq_norms"}
+    out = client.probe_cohort(params, batches, ("grad_means", "grad_vars"))
+    assert set(out) == {"grad_means", "grad_vars"}
+    # all-stats default unchanged
+    out = client.probe_cohort(params, batches)
+    assert set(out) == set(ProbeReport.KEYS)
+    # fused device scoring adds the scores row
+    snr = get_strategy("snr")
+    out = client.probe_cohort(params, batches, ("grad_means", "grad_vars"),
+                              snr.device_score_fn())
+    assert set(out) == {"grad_means", "grad_vars", "scores"}
+    assert out["scores"].shape == (3, model.n_selectable)
+
+
+def test_trimmed_probe_matches_all_stats_probe(world):
+    model, params, task = world
+    data = SyntheticFederatedData(task)
+    client = Client(model)
+    batches = data.cohort_batches(np.arange(3), 4, 2)
+    full = client.probe_cohort(params, batches)
+    trimmed = client.probe_cohort(params, batches, ("grad_sq_norms",))
+    np.testing.assert_allclose(trimmed["grad_sq_norms"],
+                               full["grad_sq_norms"], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Experiment ≡ FLServer string shim (acceptance pin)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["ours", "rgn", "snr", "top"])
+def test_experiment_matches_flserver_shim(world, strategy):
+    """Old FLServer(strategy=str) and the Experiment/registry path produce
+    bit-identical masks and cohorts per round."""
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=3, local_steps=1,
+                  lr=0.01, batch_size=4, strategy=strategy, budget=2,
+                  lam=1.0, seed=3)
+    _, h_old = FLServer(model, fl, SyntheticFederatedData(task)).run(params)
+    exp = Experiment(model, SyntheticFederatedData(task), strategy, fl=fl)
+    _, h_new = exp.run(params)
+    assert len(h_old.records) == len(h_new.records) == 3
+    for ro, rn in zip(h_old.records, h_new.records):
+        np.testing.assert_array_equal(ro.cohort, rn.cohort)
+        np.testing.assert_array_equal(ro.mask_matrix, rn.mask_matrix)
+        assert ro.test_loss == pytest.approx(rn.test_loss, abs=1e-6)
+
+
+def test_experiment_sequential_engine_and_strategy_instance(world):
+    model, params, task = world
+    exp_v = Experiment(model, SyntheticFederatedData(task),
+                       get_strategy("rgn"), rounds=2, cohort_size=4,
+                       local_steps=1, batch_size=4, budget=2, seed=7)
+    exp_s = Experiment(model, SyntheticFederatedData(task), "rgn",
+                       engine="sequential", rounds=2, cohort_size=4,
+                       local_steps=1, batch_size=4, budget=2, seed=7)
+    _, h_v = exp_v.run(params)
+    _, h_s = exp_s.run(params)
+    for rv, rs in zip(h_v.records, h_s.records):
+        np.testing.assert_array_equal(rv.cohort, rs.cohort)
+        np.testing.assert_array_equal(rv.mask_matrix, rs.mask_matrix)
+
+
+# ---------------------------------------------------------------------------
+# Mixture strategies (satellite: per-client heterogeneous strategies)
+# ---------------------------------------------------------------------------
+
+def test_mixture_matches_member_strategies_on_own_rows():
+    probe = _probe(n=6, L=8, seed=2)
+    ids = np.array([3, 7, 11, 2, 9, 5])
+    budgets = np.array([1, 2, 3, 1, 4, 2])       # heterogeneous budgets
+    assign = {3: "rgn", 7: "snr", 2: "rgn", 9: "top", 5: "ours"}
+    mix = MixtureStrategy(assign, default="ours")
+    ctx = SelectionContext(client_ids=ids, lam=1.0, n_layers=8)
+    masks = mix.select(probe, budgets, ctx)
+    # each member strategy's rows must equal running that strategy on its
+    # own client rows (joint solvers like 'ours' couple clients *within*
+    # their group via λ, so the comparison is per group, not per row)
+    owners = {int(i): assign.get(int(i), "ours") for i in ids}
+    for name in set(owners.values()):
+        rows = np.array([r for r, i in enumerate(ids)
+                         if owners[int(i)] == name])
+        sub_ctx = SelectionContext(client_ids=ids[rows], lam=1.0, n_layers=8)
+        expect = get_strategy(name).select(probe.take(rows), budgets[rows],
+                                           sub_ctx)
+        np.testing.assert_array_equal(masks[rows], expect,
+                                      err_msg=f"group {name}")
+
+
+def test_mixture_requirements_are_union():
+    mix = MixtureStrategy({0: "snr", 1: "rgn"}, default="top")
+    assert mix.probe_requirements == frozenset(
+        {"grad_means", "grad_vars", "grad_sq_norms", "param_sq_norms"})
+    assert not mix.host
+    mix2 = MixtureStrategy({0: "ours"}, default="ours")
+    assert mix2.probe_requirements == frozenset({"grad_sq_norms"})
+    assert mix2.host
+
+
+def test_mixture_callable_assignment_requires_members():
+    with pytest.raises(ValueError, match="members"):
+        MixtureStrategy(lambda i: "rgn")
+    mix = MixtureStrategy(lambda i: "rgn" if i % 2 else "snr",
+                          members=["rgn", "snr"], default="snr")
+    assert mix.strategy_of(1).name == "rgn"
+    assert mix.strategy_of(2).name == "snr"
+
+
+@pytest.mark.parametrize("period", [1, 2])
+def test_mixture_end_to_end_matches_uniform_run(world, period):
+    """A mixture assigning every client the same strategy must reproduce
+    the plain run bit-for-bit — including heterogeneous budgets and
+    selection_period > 1 (cache + on-demand probe path)."""
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=4, local_steps=1,
+                  lr=0.01, batch_size=4, strategy="rgn",
+                  budgets=(1, 2, 3, 4), selection_period=period, lam=1.0,
+                  seed=5)
+    _, h_plain = FLServer(model, fl, SyntheticFederatedData(task)).run(params)
+    mix = MixtureStrategy({i: "rgn" for i in range(12)}, default="rgn")
+    _, h_mix = FLServer(model, fl, SyntheticFederatedData(task),
+                        strategy=mix).run(params)
+    for rp, rm in zip(h_plain.records, h_mix.records):
+        np.testing.assert_array_equal(rp.cohort, rm.cohort)
+        np.testing.assert_array_equal(rp.mask_matrix, rm.mask_matrix)
+
+
+def test_mixture_heterogeneous_end_to_end_budgets_respected(world):
+    model, params, task = world
+    mix = MixtureStrategy({i: ("rgn" if i < 6 else "top")
+                           for i in range(12)}, default="ours")
+    fl = FLConfig(n_clients=12, cohort_size=5, rounds=3, local_steps=1,
+                  lr=0.01, batch_size=4, budgets=(1, 2, 3), lam=1.0,
+                  selection_period=2, seed=9)
+    exp = Experiment(model, SyntheticFederatedData(task), mix, fl=fl)
+    _, hist = exp.run(params)
+    assert len(hist.records) == 3
+    for rec in hist.records:
+        budgets = np.array([fl.budget_of(int(i)) for i in rec.cohort])
+        assert np.all(rec.mask_matrix.sum(1) <= budgets)
+        # positional members must have produced positional rows
+        for r, i in enumerate(rec.cohort):
+            if int(i) >= 6:      # "top" clients: suffix mask
+                R = budgets[r]
+                np.testing.assert_array_equal(
+                    rec.mask_matrix[r, -R:], np.ones(R))
+
+
+# ---------------------------------------------------------------------------
+# Task protocol: Dirichlet token-mixture + plan-stage hooks
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_task_implements_protocol():
+    task = DirichletTokenMixtureTask(DirichletTaskConfig(n_clients=6))
+    assert isinstance(task, Task)
+    assert isinstance(SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=4)), Task)
+
+
+def test_dirichlet_task_shapes_and_determinism():
+    cfg = DirichletTaskConfig(n_clients=6, vocab_size=64, seq_len=8,
+                              test_samples=32, seed=1)
+    t1 = DirichletTokenMixtureTask(cfg)
+    t2 = DirichletTokenMixtureTask(cfg)
+    b1 = t1.cohort_batches(np.array([0, 3]), 4, 2)
+    b2 = t2.cohort_batches(np.array([0, 3]), 4, 2)
+    assert b1["tokens"].shape == (2, 2, 4, 8)
+    assert b1["tokens"].max() < 64
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["label"], b2["label"])
+    np.testing.assert_array_equal(t1.test_batch(16)["tokens"],
+                                  t2.test_batch(16)["tokens"])
+
+
+def test_experiment_on_dirichlet_task_with_hooks(world):
+    model, params, _ = world
+    cfg = DirichletTaskConfig(n_clients=12,
+                              vocab_size=model.cfg.vocab_size, seq_len=8,
+                              test_samples=32, availability=0.5,
+                              straggler_rate=0.4, seed=2)
+    task = DirichletTokenMixtureTask(cfg)
+    exp = Experiment(model, task, "ours", rounds=4, cohort_size=4,
+                     local_steps=1, batch_size=4, budget=1, lam=1.0, seed=0)
+    _, hist = exp.run(params)
+    assert len(hist.records) == 4
+    for rec in hist.records:
+        # availability: the cohort is drawn from the round's rotating pool
+        pool = set(task.available_pool(rec.round).tolist())
+        assert set(np.asarray(rec.cohort).tolist()) <= pool
+        # stragglers may shrink the cohort but never empty it
+        assert 1 <= len(rec.cohort) <= 4
+        assert np.all(rec.mask_matrix.sum(1) <= 1)
+    # with a 40% drop rate, 4 rounds of 4 draws should lose someone
+    assert any(len(r.cohort) < 4 for r in hist.records)
+
+
+def test_hookless_task_cohort_stream_unchanged(world):
+    """Tasks without hooks must leave the server rng stream untouched —
+    the same seed draws the same cohorts as a pre-API server."""
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=3, strategy="top",
+                  budget=1, seed=42)
+    _, hist = FLServer(model, fl, SyntheticFederatedData(task)).run(params)
+    rng = np.random.RandomState(42)
+    for rec in hist.records:
+        np.testing.assert_array_equal(
+            rec.cohort, rng.choice(12, size=4, replace=False))
