@@ -87,13 +87,16 @@ def build_world(scn: Scenario, seed: int = 0):
 
 ENGINE = os.environ.get("BENCH_ENGINE", "vectorized")
 # BENCH_PIPELINE=0 disables the streaming round pipeline (same results,
-# synchronous stage execution) — for A/B timing.
+# synchronous stage execution) — for A/B timing.  BENCH_PIPELINE_DEPTH=k
+# sets the scheduler lookahead (same results at any depth, DESIGN.md §5).
 PIPELINE = os.environ.get("BENCH_PIPELINE", "1") != "0"
+PIPELINE_DEPTH = int(os.environ.get("BENCH_PIPELINE_DEPTH", "1"))
 
 
 def run_fl(scn: Scenario, strategy, *, budget=1, budgets=None,
            rounds: int = ROUNDS, seed: int = 0,
-           engine: str = ENGINE, pipeline: bool = PIPELINE) -> History:
+           engine: str = ENGINE, pipeline: bool = PIPELINE,
+           pipeline_depth: int = PIPELINE_DEPTH) -> History:
     """Run one scenario through the Experiment front door.
 
     ``strategy`` is a registered name or any Strategy instance (e.g. a
@@ -105,7 +108,7 @@ def run_fl(scn: Scenario, strategy, *, budget=1, budgets=None,
                   batch_size=scn.batch_size,
                   budget=budget, budgets=budgets, lam=scn.lam, seed=seed)
     exp = Experiment(model, data, strategy, fl=fl, engine=engine,
-                     pipeline=pipeline)
+                     pipeline=pipeline, pipeline_depth=pipeline_depth)
     _, hist = exp.run(params)
     return hist
 

@@ -1,17 +1,21 @@
-"""CI micro-benchmark gate: round_engine + full_round + probe_trim.
+"""CI micro-benchmark gate: round_engine + full_round + probe_trim +
+pipeline_depth.
 
     PYTHONPATH=src python -m benchmarks.micro_ci
 
 Runs the engine micro-benchmarks, records them to
 ``experiments/bench/BENCH_round_engine.json``,
-``experiments/bench/BENCH_full_round.json`` and
-``experiments/bench/BENCH_probe_trim.json`` (uploaded as CI artifacts),
-and enforces the wall-clock budgets: the vectorized engine step must not be
-slower than the sequential oracle at any cohort size, the streaming
-pipeline's full round (sampling included) must not be slower than the
-pre-pipeline legacy path (no dispatch regression from the pluggable-API
-probe path), and the requirements-trimmed probes must not be slower than
-the all-stats probe.  Exits non-zero on a budget violation.
+``experiments/bench/BENCH_full_round.json``,
+``experiments/bench/BENCH_probe_trim.json`` and
+``experiments/bench/BENCH_pipeline_depth.json`` (uploaded as CI
+artifacts), and enforces the wall-clock budgets: the vectorized engine
+step must not be slower than the sequential oracle at any cohort size, the
+streaming pipeline's full round (sampling included) must not be slower
+than the pre-pipeline legacy path (no dispatch regression from the
+pluggable-API probe path), the requirements-trimmed probes must not be
+slower than the all-stats probe, and the depth-k lookahead scheduler must
+not be slower than the depth-1 double buffer (paired per-rep ratios).
+Exits non-zero on a budget violation.
 """
 from __future__ import annotations
 
@@ -24,7 +28,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     from benchmarks.common import save_result
-    from benchmarks.run import (full_round_benchmarks, probe_trim_benchmarks,
+    from benchmarks.run import (full_round_benchmarks,
+                                pipeline_depth_benchmarks,
+                                probe_trim_benchmarks,
                                 round_engine_benchmarks)
 
     print("name,us_per_call,derived")
@@ -34,6 +40,8 @@ def main() -> None:
     save_result("BENCH_full_round", full)
     probe = probe_trim_benchmarks()
     save_result("BENCH_probe_trim", probe)
+    pdepth = pipeline_depth_benchmarks()
+    save_result("BENCH_pipeline_depth", pdepth)
 
     failures = []
     by_cohort: dict = {}
@@ -57,17 +65,27 @@ def main() -> None:
             failures.append(
                 f"probe_trim: {name} paired ratio "
                 f"{probe[f'{name}_ratio']:.2f} > 1.10 vs all_stats")
+    # depth-k lookahead does strictly more overlap than the depth-1 double
+    # buffer with identical results; gate the median of paired per-rep
+    # ratios with the same 10% CI-jitter headroom
+    if pdepth["paired_ratio"] > 1.10:
+        failures.append(
+            f"pipeline_depth: depth-{pdepth['depth']} paired ratio "
+            f"{pdepth['paired_ratio']:.2f} > 1.10 vs depth-1")
 
     print(f"full_round speedup over pre-pipeline path: "
           f"{full['speedup']:.2f}x")
     print(f"probe trim (ours): paired ratio "
           f"{probe['ours_trimmed_ratio']:.2f} vs all-stats probe")
+    print(f"pipeline depth-{pdepth['depth']}: paired ratio "
+          f"{pdepth['paired_ratio']:.2f} vs depth-1")
     if failures:
         for f in failures:
             print(f"BUDGET VIOLATION: {f}", file=sys.stderr)
         sys.exit(1)
     print("micro-benchmark budget: OK "
-          "(vectorized <= sequential, trimmed probe <= all-stats)")
+          "(vectorized <= sequential, trimmed probe <= all-stats, "
+          "depth-k <= depth-1)")
 
 
 if __name__ == "__main__":

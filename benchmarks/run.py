@@ -88,6 +88,8 @@ def micro_benchmarks():
     full_round_benchmarks()
     # requirements-trimmed selection probe vs the all-stats probe
     probe_trim_benchmarks()
+    # depth-k lookahead scheduler vs the classic depth-1 double buffer
+    pipeline_depth_benchmarks()
 
 
 def round_engine_benchmarks() -> list[dict]:
@@ -230,6 +232,74 @@ def probe_trim_benchmarks(cohort_n: int = 8) -> dict:
             derived = f"{1.0 / ratio:.2f}x_vs_all"
         print(f"probe_{name}_c{cohort_n},{us:.1f},{derived}")
         out[f"{name}_us"] = us
+    return out
+
+
+def pipeline_depth_benchmarks(depth: int = 4, cohort_n: int = 8,
+                              rounds: int = 4) -> dict:
+    """Warm µs per full round: depth-k lookahead scheduler vs depth-1.
+
+    Both rows run the streaming pipeline (RoundScheduler) on the
+    sampling-bound config of :func:`full_round_benchmarks`; the only change
+    is ``pipeline_depth`` — how many rounds ahead the host plans/samples
+    while the (P1) solve runs on its background thread.  Results are
+    bit-identical across depths (tests/test_scheduler.py); the delta is
+    pure host scheduling.  ``micro_ci`` gates depth-k ≥ depth-1 throughput
+    via the median of *paired* per-rep ratios (each rep times both depths
+    back to back, so load spikes hit both sides and cancel).  Returns a
+    dict suitable for BENCH_pipeline_depth.json.
+    """
+    from dataclasses import replace
+
+    if depth < 2:
+        raise ValueError(f"depth must be >= 2 to compare against depth-1, "
+                         f"got {depth}")
+
+    from repro.configs.base import (FLConfig, RuntimeConfig, get_arch,
+                                    reduced)
+    from repro.core.server import FLServer
+    from repro.data.synthetic import (FederatedTaskConfig,
+                                      SyntheticFederatedData)
+    from repro.models.model import Model
+
+    cfg = replace(reduced(get_arch("xlm_roberta_base"), n_layers=2,
+                          d_model=16), vocab_size=4096)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=4))
+    params = model.init(jax.random.PRNGKey(0))
+    task = FederatedTaskConfig(
+        n_clients=20, n_classes=10, vocab_size=cfg.vocab_size, seq_len=4,
+        samples_per_client=16, skew="label", objective="classification",
+        test_samples=4096)
+    fl = FLConfig(n_clients=20, cohort_size=cohort_n, local_steps=2,
+                  lr=0.01, batch_size=16, strategy="ours", budget=1)
+    rounds = 1 if FAST else rounds
+    reps = 2 if FAST else 5
+
+    def fresh(d):
+        # fresh data + server per timed run: the per-client streams and
+        # solver warm caches start identical for both depths
+        return FLServer(model, fl, SyntheticFederatedData(task),
+                        pipeline=True, pipeline_depth=d)
+
+    for d in (1, depth):                     # warmup: compile both shapes
+        fresh(d).run(params, rounds=2)
+    times: dict = {1: [], depth: []}
+    for _ in range(reps):
+        for d in (1, depth):                 # interleave: paired reps
+            server = fresh(d)
+            t0 = time.perf_counter()
+            server.run(params, rounds=rounds)    # run() syncs on finalize
+            times[d].append((time.perf_counter() - t0) / rounds)
+    t1, tk = np.asarray(times[1]), np.asarray(times[depth])
+    ratio = float(np.median(tk / t1))
+    out = {"cohort": cohort_n, "rounds_timed": rounds, "reps": reps,
+           "depth": depth, "paired_ratio": ratio,
+           "depth1_us_per_round": float(np.min(t1) * 1e6),
+           f"depth{depth}_us_per_round": float(np.min(tk) * 1e6)}
+    print(f"pipeline_depth1_c{cohort_n},{out['depth1_us_per_round']:.1f},-")
+    print(f"pipeline_depth{depth}_c{cohort_n},"
+          f"{out[f'depth{depth}_us_per_round']:.1f},"
+          f"{1.0 / ratio:.2f}x_vs_depth1")
     return out
 
 

@@ -35,11 +35,14 @@ def main():
     #    λ.  Any registered strategy name works — see
     #    repro.api.strategy_names() and examples/custom_strategy.py.
     #    pretrain_steps builds the "pretrained foundation model" stand-in
-    #    (DESIGN.md §2) before the federated rounds.
+    #    (DESIGN.md §2) before the federated rounds.  pipeline_depth makes
+    #    the round scheduler plan/sample 2 rounds ahead of the in-flight
+    #    device program (results identical at any depth, DESIGN.md §5).
     exp = Experiment(cfg, task, strategy="ours",
                      cohort_size=5, rounds=3 if SMOKE else 10,
                      local_steps=2, lr=0.01, batch_size=16, budget=1,
-                     lam=1.0, pretrain_steps=30 if SMOKE else 150)
+                     lam=1.0, pretrain_steps=30 if SMOKE else 150,
+                     pipeline_depth=2)
     params, hist = exp.run(verbose=True)
 
     print("\nsummary:", hist.summary())

@@ -11,7 +11,9 @@
 an already-built Model), a :class:`repro.api.task.Task`, and a strategy
 (registered name or Strategy instance, including per-client
 :class:`~repro.api.strategy.MixtureStrategy` objects) — and builds the
-round engine (``engine="vectorized" | "sequential"``).  FL hyper-parameters
+round engine (``engine="vectorized" | "sequential"``; ``pipeline_depth=k``
+sets how many rounds ahead the streaming scheduler plans/samples, see
+``repro.core.scheduler``).  FL hyper-parameters
 come from an explicit ``fl=FLConfig(...)`` or keyword overrides
 (``rounds=...``, ``budget=...``, ...); ``n_clients`` always follows the
 task.  ``FLServer(model, fl, data)`` with a string strategy remains the
@@ -44,6 +46,7 @@ class Experiment:
                  runtime: Optional[RuntimeConfig] = None,
                  engine: str = "vectorized",
                  pipeline: Optional[bool] = None,
+                 pipeline_depth: int = 1,
                  pretrain_steps: int = 0, pretrain_lr: float = 3e-3,
                  seed: Optional[int] = None,
                  **fl_overrides):
@@ -67,6 +70,7 @@ class Experiment:
             self.fl = replace(self.fl, cohort_size=n_clients)
         self.engine = engine
         self.pipeline = pipeline
+        self.pipeline_depth = pipeline_depth
         self.pretrain_steps = pretrain_steps
         self.pretrain_lr = pretrain_lr
         self._server: Optional[FLServer] = None
@@ -78,6 +82,7 @@ class Experiment:
             self._server = FLServer(self.model, self.fl, self.task,
                                     engine=self.engine,
                                     pipeline=self.pipeline,
+                                    pipeline_depth=self.pipeline_depth,
                                     strategy=self.strategy)
         return self._server
 

@@ -75,6 +75,11 @@ class SelectionContext:
     costs: Optional[np.ndarray] = None     # (L,) per-layer cost vector
     n_layers: int = 0
     eps: float = 1e-12
+    # warm-start hint for iterative host solvers: the cohort's previous
+    # converged mask rows (aligned with client_ids), or None for a cold
+    # start.  FLServer fills this from its per-client-id mask cache; a
+    # strategy is free to ignore it.
+    init: Optional[np.ndarray] = None      # (n, L) previous masks
 
 
 class Strategy:
@@ -83,6 +88,12 @@ class Strategy:
     name: str = "?"
     probe_requirements: frozenset = frozenset()
     host: bool = False
+    # True => select() is a pure function of (probe, budgets, client_ids,
+    # lam, costs) — notably independent of ctx.round — so the round engines
+    # may skip the solve when those inputs are byte-identical to the
+    # previous round ("unchanged utilities" early exit).  Leave False for
+    # strategies with round-dependent schedules (exploration, annealing).
+    memoizable_select: bool = False
 
     def select(self, probe: ProbeReport, budgets,
                ctx: SelectionContext) -> np.ndarray:
@@ -221,6 +232,7 @@ class _OursSolver(Strategy):
 
     host = True
     probe_requirements = frozenset({"grad_sq_norms"})
+    memoizable_select = True          # (P1) is round-independent
 
     def __init__(self, solver: str):
         self._solver = solver
@@ -228,8 +240,11 @@ class _OursSolver(Strategy):
     def select(self, probe, budgets, ctx):
         solve = get_solver(self._solver)
         if self._solver == "icm":
+            # ctx.init warm-starts the block-coordinate ascent from the
+            # cohort's previous converged masks — fewer sweeps once layer
+            # utilities stabilise, still budget-exact (core/solver.py)
             masks, _, _ = solve(probe.grad_sq_norms, budgets, ctx.lam,
-                                costs=ctx.costs)
+                                costs=ctx.costs, init=ctx.init)
             return masks
         return solve(probe.grad_sq_norms, budgets, costs=ctx.costs)
 
@@ -280,6 +295,10 @@ class MixtureStrategy(Strategy):
         self.probe_requirements = frozenset().union(
             *(m.probe_requirements for m in self._members))
         self.host = any(m.host for m in self._members)
+        # routing is by client id (in the memo key), so the mixture is
+        # memoizable iff every member is
+        self.memoizable_select = all(
+            getattr(m, "memoizable_select", False) for m in self._members)
 
     def strategy_of(self, client_id: int) -> Strategy:
         s = self._fn(int(client_id))
@@ -293,7 +312,8 @@ class MixtureStrategy(Strategy):
         masks = np.zeros((n, L), np.float32)
         for strat in dict.fromkeys(owners):
             rows = np.array([r for r, o in enumerate(owners) if o is strat])
-            sub = replace(ctx, client_ids=ids[rows])
+            sub = replace(ctx, client_ids=ids[rows],
+                          init=None if ctx.init is None else ctx.init[rows])
             masks[rows] = strat.select(probe.take(rows), budgets[rows], sub)
         return masks
 

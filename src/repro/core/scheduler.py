@@ -1,0 +1,174 @@
+"""Depth-k lookahead round scheduler with async (P1) solver overlap.
+
+Replaces the hand-rolled double buffer that used to live in
+``FLServer._run_pipelined``: the streaming round pipeline is now a
+subsystem that (a) plans and samples rounds t+1..t+k on the host while the
+round-t device program is still in flight, (b) runs the host layer-selection
+solve — materialising the probe stats and solving (P1) — on a background
+thread so it overlaps both the in-flight XLA program and the host-side
+prefetch, and (c) keeps the device-side structure of the double buffer:
+the t+1 selection probe rides round t's update program (fused into one XLA
+program when ``selection_period == 1``, chained on the params future
+otherwise).
+
+Parity contract (tests/test_scheduler.py, tests/test_round_engine.py): the
+scheduler is a pure *scheduling* change — cohorts and masks are
+bit-identical to the synchronous :meth:`FLServer.run_round` loop and params
+agree within fp tolerance, at every depth, including under Task
+availability/straggler hooks.  Three orderings pin when work may fire:
+
+* **Server rng** — ``plan_round`` consumes the server RandomState (cohort
+  draw + availability/straggler hooks), so plans must fire in round order.
+  The prefetch queue issues them strictly ascending.
+* **Per-client data streams** — each client's rng must see round t's draws
+  (probe before update) before round t+1's.  ``sample_round`` draws a whole
+  round at enqueue time, so queue order preserves stream order.
+* **Stats-cache reads** — with ``selection_period > 1`` a non-refresh
+  ``plan_round(t+1)`` reads the per-client stats cache as left by
+  select(t), so its plan may only fire once that select completed
+  (:meth:`RoundScheduler._can_plan`).  Refresh rounds and probe-free
+  strategies are cache-free and may plan arbitrarily deep — with
+  ``selection_period == 1`` the full depth-k lookahead is always available.
+
+The select stage itself never touches an rng and only the solver thread
+mutates the server's stats/warm-mask caches (one solve in flight at a
+time), so running it concurrently with host sampling is race-free.
+
+``wall_s`` in pipelined records is the *host* time per round (async-select
+submit → dispatch complete, including the prefetch that ran inside the
+round), not device latency: in-flight rounds report milliseconds and the
+end-of-run drain is excluded, so ``sum(wall_s)`` ≤ total elapsed run time
+(pinned in tests/test_scheduler.py).  ``verbose=True`` never syncs the
+just-dispatched round: round t's record is printed at the end of iteration
+t+1, when its program has long been retired — printing no longer destroys
+the overlap it is reporting on.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any
+
+from repro.core.server import (FLServer, History, RoundRecord, SampledRound)
+
+PyTree = Any
+
+
+class RoundScheduler:
+    """Depth-k streaming executor for ``FLServer``'s round stages.
+
+    ``depth`` is how many rounds ahead of the in-flight round the host
+    plans and samples; ``depth=1`` reproduces the classic double buffer.
+    A scheduler instance drives one ``run`` at a time (it owns a
+    single-worker solver thread for the duration of the run).
+    """
+
+    def __init__(self, server: FLServer, depth: int = 1):
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        self.server = server
+        self.depth = depth
+        self._queue: deque[SampledRound] = deque()   # rounds, t ascending
+        self._next_plan = 0          # next round index to plan (rng order)
+        self._selected_through = -1  # highest t whose select completed
+
+    # -- host prefetch ----------------------------------------------------
+    def _can_plan(self, t: int) -> bool:
+        """May ``plan_round(t)`` fire now?  Plans always fire in t order
+        (queue discipline); additionally a non-refresh plan's probe_ids
+        read the stats cache as left by select(t-1)."""
+        srv = self.server
+        if not srv.needs_probe or t % srv.fl.selection_period == 0:
+            return True
+        return self._selected_through >= t - 1
+
+    def _prefetch(self, T: int, want: int) -> None:
+        """Top the queue up to ``want`` pending rounds (plan + sample)."""
+        while (self._next_plan < T and len(self._queue) < want
+               and self._can_plan(self._next_plan)):
+            plan = self.server.plan_round(self._next_plan)
+            self._queue.append(self.server.sample_round(plan))
+            self._next_plan += 1
+
+    # -- async select -----------------------------------------------------
+    def _select(self, plan, stats_dev):
+        """Solver-thread body: materialise the probe stats (the pipeline's
+        one device sync) and run the host selection.  Mutates only the
+        server's stats/warm-mask caches — reads of those by the main thread
+        are gated on this select having completed (:meth:`_can_plan`)."""
+        srv = self.server
+        return srv.select_round(plan, srv._stats_np(stats_dev))
+
+    # -- the round loop ---------------------------------------------------
+    def run(self, params: PyTree, T: int,
+            verbose: bool) -> tuple[PyTree, History]:
+        srv = self.server
+        fl, client = srv.fl, srv.client
+        reqs, score_fn = srv._probe_reqs, srv._score_fn
+        fuse = srv.needs_probe and fl.selection_period == 1
+        srv._ensure_layer_params(params)
+        test = srv.data.test_batch()
+
+        self._prefetch(T, self.depth)
+        sampled = self._queue.popleft()              # round 0
+        stats_dev = (client.probe_cohort_raw(params, sampled.probe_batches,
+                                             reqs, score_fn)
+                     if sampled.probe_batches is not None else None)
+        pending: list = []       # raw entries; finalized lazily (verbose)
+        pool = ThreadPoolExecutor(max_workers=1,
+                                  thread_name_prefix="p1-solver")
+        try:
+            for t in range(T):
+                t0 = time.time()
+                plan = sampled.plan
+                # the host solve (stats sync + (P1)) overlaps the in-flight
+                # device program *and* the prefetch below
+                masks_fut = pool.submit(self._select, plan, stats_dev)
+                # lookahead: sample rounds t+1..t+depth whose plans are
+                # cache-free while the solver thread works
+                self._prefetch(T, self.depth)
+                masks = masks_fut.result()
+                self._selected_through = t
+                # cache-dependent plans (selection_period > 1, non-refresh)
+                # unblock once select(t) has landed in the stats cache
+                self._prefetch(T, self.depth)
+
+                nxt = self._queue[0] if self._queue else None
+                nstats = None
+                if fuse and nxt is not None and \
+                        nxt.probe_batches is not None:
+                    # round t+1's probe rides round t's update program
+                    params, losses, nstats = client.probe_update_cohort_raw(
+                        params, sampled.update_batches, masks, plan.sizes,
+                        fl.lr, nxt.probe_batches, reqs, score_fn)
+                else:
+                    params, losses = client.cohort_update_raw(
+                        params, sampled.update_batches, masks, plan.sizes,
+                        fl.lr)
+                    if nxt is not None and nxt.probe_batches is not None:
+                        # chained on the params future: overlaps the update
+                        # on-device, no host round-trip in between
+                        nstats = client.probe_cohort_raw(
+                            params, nxt.probe_batches, reqs, score_fn)
+                loss_dev, acc_dev = client.evaluate_raw(params, test)
+                pending.append((plan, masks, losses, loss_dev, acc_dev,
+                                time.time() - t0))
+                if verbose and t >= 1:
+                    # print the *previous* round: its program has retired,
+                    # so materialising it cannot stall the round just
+                    # dispatched (printing used to sync every round)
+                    pending[t - 1] = srv._finalize(pending[t - 1])
+                    srv._print_round(pending[t - 1])
+                if self._queue:
+                    sampled, stats_dev = self._queue.popleft(), nstats
+        finally:
+            pool.shutdown(wait=True)
+
+        hist = History()
+        for p in pending:                            # end-of-run drain
+            rec = p if isinstance(p, RoundRecord) else srv._finalize(p)
+            if verbose and not isinstance(p, RoundRecord):
+                srv._print_round(rec)
+            hist.records.append(rec)
+        return params, hist

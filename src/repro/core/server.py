@@ -24,14 +24,18 @@ A round is composed of explicit pipeline stages (DESIGN.md §5):
 
 :meth:`FLServer.run_round` executes them synchronously; the default
 :meth:`FLServer.run` path for the vectorized engine streams them instead
-(``pipeline=True``): round t+1's cohort batches are sampled on the host
-while round t's jitted update is still in flight (jax async dispatch), the
-t+1 selection probe is dispatched on the not-yet-materialised updated
-params so it overlaps the update on-device, and — when every round
-re-selects (``selection_period == 1``) — probe and update are fused into a
-single XLA program (Client.probe_update_cohort).  The pipelined loop
-consumes the per-client rng streams in exactly the same order as the
-synchronous one, so results are unchanged (tests/test_round_engine.py).
+(``pipeline=True``) through :class:`repro.core.scheduler.RoundScheduler`
+— a depth-k lookahead pipeline (``pipeline_depth``, default 1): rounds
+t+1..t+k are planned and sampled on the host while round t's jitted update
+is still in flight (jax async dispatch), the host (P1) solve runs on a
+background thread overlapped with the in-flight program, the t+1 selection
+probe is dispatched on the not-yet-materialised updated params so it
+overlaps the update on-device, and — when every round re-selects
+(``selection_period == 1``) — probe and update are fused into a single XLA
+program (Client.probe_update_cohort).  The scheduler consumes every host
+rng and per-client data stream in exactly the same order as the
+synchronous loop, so results are unchanged (tests/test_round_engine.py,
+tests/test_scheduler.py).
 
 Selection-period caching is per client id: probe statistics are cached at
 refresh rounds (``t % selection_period == 0``) and masks are re-derived
@@ -145,18 +149,24 @@ class FLServer:
                  rng: Optional[np.random.RandomState] = None,
                  engine: str = "vectorized",
                  pipeline: Optional[bool] = None,
+                 pipeline_depth: int = 1,
                  strategy: "Optional[Strategy | str]" = None):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+        if pipeline_depth < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, got {pipeline_depth}")
         self.model = model
         self.fl = fl
         self.data = data
         self.client = Client(model)
         self.rng = rng or np.random.RandomState(fl.seed)
         self.engine = engine
-        # streaming round pipeline (vectorized engine only): double-buffered
-        # host prefetch + async probe/update overlap, same results
+        # streaming round pipeline (vectorized engine only): depth-k host
+        # prefetch + async solve + probe/update overlap, same results.
+        # pipeline_depth = how many rounds ahead the scheduler plans/samples
+        # (1 = the classic double buffer).
         self.pipeline = (engine == "vectorized") if pipeline is None else pipeline
+        self.pipeline_depth = pipeline_depth
         self.L = model.n_selectable
         self.layer_costs = None      # optional per-layer cost vector for (P1)
         # registry-resolved strategy (fl.strategy is the back-compat string
@@ -179,6 +189,18 @@ class FLServer:
         # per-client-id probe stats (selection_period > 1); cleared at refresh
         self._stats_cache: dict[int, dict[str, np.ndarray]] = {}
         self._layer_params: Optional[np.ndarray] = None
+        # host-solver acceleration state (host strategies only):
+        # * _warm_masks — per client id, the last converged mask row; warms
+        #   the next (P1) solve via SelectionContext.init (fewer ICM sweeps
+        #   once utilities stabilise).  Never cleared: it is a hint, not a
+        #   cache — solve outputs stay budget-exact regardless.
+        # * _select_memo — (inputs-key, masks) of the last host solve; an
+        #   identical (cohort, budgets, stats) round skips the solve
+        #   entirely (the "unchanged utilities" early exit).
+        # select_stats counts solves vs memo hits for tests/benchmarks.
+        self._warm_masks: dict[int, np.ndarray] = {}
+        self._select_memo: Optional[tuple] = None
+        self.select_stats = {"solves": 0, "memo_hits": 0}
 
     @property
     def needs_probe(self) -> bool:
@@ -221,6 +243,15 @@ class FLServer:
                                      size=self.fl.cohort_size, replace=False)
         else:
             pool = np.asarray(pool)
+            if pool.size == 0:
+                # an empty cohort would reach aggregation/np.mean(losses)
+                # and crash with an opaque error several stages later —
+                # fail at the plan stage with the actual cause instead
+                raise ValueError(
+                    f"available_clients returned an empty pool for round "
+                    f"{t}: no cohort can be drawn (the task's availability "
+                    f"hook must return at least one client id, or None for "
+                    f"full availability)")
             k = min(self.fl.cohort_size, len(pool))
             cohort = pool[self.rng.choice(len(pool), size=k, replace=False)]
         drop = getattr(self.data, "drop_stragglers", None)
@@ -266,8 +297,41 @@ class FLServer:
         return {k: np.stack([r[k] for r in rows]) for k in rows[0]}
 
     # -- stage 4: select (host) ------------------------------------------
+    def _warm_init(self, cohort: np.ndarray) -> Optional[np.ndarray]:
+        """Warm-start rows for an iterative host solve: the cohort's
+        previous converged masks, or None when any member is unseen (a
+        partial warm start would need the solver's own greedy fill)."""
+        if not self.strategy.host or not self._warm_masks:
+            return None
+        rows = [self._warm_masks.get(int(i)) for i in cohort]
+        if any(r is None for r in rows):
+            return None
+        return np.stack(rows)
+
+    def _memo_key(self, plan: RoundPlan, probe: ProbeReport) -> tuple:
+        """Exact-inputs key for the host-solve memo: cohort ids, budgets, λ,
+        layer costs and every present probe stat, byte-compared (no fp
+        tolerance)."""
+        stat_bytes = tuple(
+            (k, v.tobytes()) for k, v in (
+                (k, getattr(probe, k)) for k in (*ProbeReport.KEYS, "scores"))
+            if v is not None)
+        costs = (None if self.layer_costs is None
+                 else np.asarray(self.layer_costs, np.float64).tobytes())
+        return (np.asarray(plan.cohort, np.int64).tobytes(),
+                np.asarray(plan.budgets, np.float64).tobytes(),
+                float(self.fl.lam), costs, stat_bytes)
+
     def select_round(self, plan: RoundPlan,
                      stats: Optional[dict[str, np.ndarray]]) -> np.ndarray:
+        """Derive the round's masks (host).  For host strategies (the (P1)
+        solvers) two accelerations apply, shared by the synchronous loop and
+        the pipelined scheduler so parity is preserved by construction:
+        a per-client-id warm start (``SelectionContext.init`` — a hint a
+        strategy is free to ignore) and, for strategies declaring
+        ``memoizable_select``, an early exit when (cohort, budgets,
+        utilities) are byte-identical to the previous solve.
+        """
         fl = self.fl
         if plan.refresh:
             self._stats_cache.clear()
@@ -282,8 +346,27 @@ class FLServer:
                                                         self.L), np.float32))
         ctx = SelectionContext(client_ids=np.asarray(plan.cohort),
                                round=plan.t, lam=fl.lam,
-                               costs=self.layer_costs, n_layers=self.L)
-        return self.strategy.select(probe, plan.budgets, ctx)
+                               costs=self.layer_costs, n_layers=self.L,
+                               init=self._warm_init(plan.cohort))
+        if not self.strategy.host:
+            return self.strategy.select(probe, plan.budgets, ctx)
+        # the early exit only applies to strategies declaring their select
+        # round-independent (Strategy.memoizable_select) — a custom host
+        # strategy with e.g. an annealing schedule must never be replayed
+        memoizable = getattr(self.strategy, "memoizable_select", False)
+        key = self._memo_key(plan, probe) if memoizable else None
+        if memoizable and self._select_memo is not None \
+                and self._select_memo[0] == key:
+            self.select_stats["memo_hits"] += 1
+            masks = self._select_memo[1].copy()
+        else:
+            masks = self.strategy.select(probe, plan.budgets, ctx)
+            self.select_stats["solves"] += 1
+            if memoizable:
+                self._select_memo = (key, masks.copy())
+        for r, i in enumerate(plan.cohort):
+            self._warm_masks[int(i)] = masks[r].copy()
+        return masks
 
     def select_masks(self, params: PyTree, cohort: np.ndarray,
                      t: int) -> np.ndarray:
@@ -352,14 +435,16 @@ class FLServer:
 
     def run(self, params: PyTree, rounds: Optional[int] = None,
             verbose: bool = False) -> tuple[PyTree, History]:
-        T = rounds or self.fl.rounds
+        T = rounds if rounds is not None else self.fl.rounds
         # legacy sampling redraws the test set every round (mutating
         # _test_rng) — hoisting eval data out of the loop would change its
         # semantics, so legacy runs always take the synchronous path
         legacy = getattr(self.data, "legacy_sampling", False)
         if self.engine == "vectorized" and self.pipeline and not legacy \
                 and T > 0:
-            return self._run_pipelined(params, T, verbose)
+            from repro.core.scheduler import RoundScheduler
+            return RoundScheduler(self, depth=self.pipeline_depth).run(
+                params, T, verbose)
         hist = History()
         for t in range(T):
             params, rec = self.run_round(params, t)
@@ -368,93 +453,7 @@ class FLServer:
                 self._print_round(rec)
         return params, hist
 
-    # -- streaming pipeline ----------------------------------------------
-    def _run_pipelined(self, params: PyTree, T: int,
-                       verbose: bool) -> tuple[PyTree, History]:
-        """Double-buffered round loop (vectorized engine).
-
-        ASCII timeline, ``selection_period == 1`` (fused probe+update)::
-
-            host   | sample t+1 | select t |  dispatch  | record | sample t+2 | ...
-            device |   ...fused program t-1 (update + probe t)...| fused t ...
-
-        Round t+1's batches are drawn while round t-1's program is still in
-        flight; the selection probe for round t+1 rides round t's update
-        program (Client.probe_update_cohort).  With ``selection_period > 1``
-        the probe is a separate dispatch chained on the updated-params
-        future, so it still overlaps the update on-device; prefetching then
-        happens right after the update dispatch (the plan depends on the
-        post-select stats cache).  Every host rng and per-client data stream
-        is consumed in exactly the synchronous order — results are
-        bit-identical on masks/cohorts and fp-identical on params.
-
-        ``wall_s`` in pipelined records is the *host* time per round
-        (dispatch + select sync), not device latency — in-flight rounds
-        report milliseconds while the final round absorbs the drain.
-        """
-        fl = self.fl
-        client = self.client
-        reqs, score_fn = self._probe_reqs, self._score_fn
-        fuse = self.needs_probe and fl.selection_period == 1
-        self._ensure_layer_params(params)
-        test = self.data.test_batch()
-
-        plan = self.plan_round(0)
-        sampled = self.sample_round(plan)
-        stats_dev = (client.probe_cohort_raw(params, sampled.probe_batches,
-                                             reqs, score_fn)
-                     if sampled.probe_batches is not None else None)
-        pending: list = []        # raw entries, or RoundRecords when verbose
-
-        for t in range(T):
-            t0 = time.time()
-            nxt = nxt_sampled = None
-            nstats = None
-            if fuse:
-                # prefetch first: probe_ids are the full cohort every round,
-                # so the t+1 plan needs no post-select cache state and the
-                # host sampling overlaps the in-flight fused program t-1
-                if t + 1 < T:
-                    nxt = self.plan_round(t + 1)
-                    nxt_sampled = self.sample_round(nxt)
-                masks = self.select_round(plan, self._stats_np(stats_dev))
-                if nxt_sampled is not None and \
-                        nxt_sampled.probe_batches is not None:
-                    params, losses, nstats = client.probe_update_cohort_raw(
-                        params, sampled.update_batches, masks, plan.sizes,
-                        fl.lr, nxt_sampled.probe_batches, reqs, score_fn)
-                else:
-                    params, losses = client.cohort_update_raw(
-                        params, sampled.update_batches, masks, plan.sizes,
-                        fl.lr)
-            else:
-                masks = self.select_round(plan, self._stats_np(stats_dev))
-                params, losses = client.cohort_update_raw(
-                    params, sampled.update_batches, masks, plan.sizes, fl.lr)
-                if t + 1 < T:
-                    # plan after select (probe_ids depend on the stats cache);
-                    # host sampling overlaps the just-dispatched update
-                    nxt = self.plan_round(t + 1)
-                    nxt_sampled = self.sample_round(nxt)
-                    if nxt_sampled.probe_batches is not None:
-                        # chained on the params future: overlaps the update
-                        # on-device, no host round-trip in between
-                        nstats = client.probe_cohort_raw(
-                            params, nxt_sampled.probe_batches, reqs, score_fn)
-            loss_dev, acc_dev = client.evaluate_raw(params, test)
-            entry = (plan, masks, losses, loss_dev, acc_dev,
-                     time.time() - t0)
-            if verbose:        # materialise now (syncs); finalized only once
-                entry = self._finalize(entry)
-                self._print_round(entry)
-            pending.append(entry)
-            plan, sampled, stats_dev = nxt, nxt_sampled, nstats
-
-        hist = History()
-        hist.records.extend(p if isinstance(p, RoundRecord)
-                            else self._finalize(p) for p in pending)
-        return params, hist
-
+    # -- streaming pipeline (repro.core.scheduler.RoundScheduler) ---------
     @staticmethod
     def _stats_np(stats_dev) -> Optional[dict[str, np.ndarray]]:
         """Materialise a raw probe result (the pipeline's one sync point)."""

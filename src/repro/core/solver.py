@@ -30,7 +30,16 @@ import numpy as np
 
 
 def _pick_topk_budget(util: np.ndarray, costs: np.ndarray, budget: float) -> np.ndarray:
-    """Greedy knapsack: pick layers by utility density until budget exhausted."""
+    """Greedy knapsack: pick layers by utility density until budget exhausted.
+
+    The constraint R(m_i) ≤ R_i is hard: when the budget does not admit even
+    the cheapest layer the result is the *empty* mask — the client sits the
+    round out (its delta is zero and Eq. 7 gives it zero aggregation weight)
+    rather than silently training a layer it cannot afford.  (The previous
+    fallback forced ``argmin(costs)`` regardless of cost, violating the
+    budget.)  With any affordable layer the greedy scan always selects at
+    least one, so masks stay non-empty whenever the budget admits one.
+    """
     m = np.zeros(util.shape[0], dtype=np.float32)
     density = util / np.maximum(costs, 1e-12)
     order = np.argsort(-density)
@@ -41,8 +50,6 @@ def _pick_topk_budget(util: np.ndarray, costs: np.ndarray, budget: float) -> np.
         if spent + costs[l] <= budget + 1e-9:
             m[l] = 1.0
             spent += costs[l]
-    if m.sum() == 0:   # budget must admit at least the cheapest layer
-        m[np.argmin(costs)] = 1.0
     return m
 
 
@@ -64,11 +71,20 @@ def solve_icm(G: np.ndarray, budgets, lam: float, *,
 
     G: (n, L) per-client per-layer squared gradient norms.
     budgets: scalar or (n,) — R_i, in units of ``costs`` (default: #layers).
+    init: optional (n, L) warm-start mask matrix (e.g. the previous selection
+    round's converged masks, keyed by client id — the round engines pass it
+    via ``SelectionContext.init``).  A warm start that is already a fixed
+    point of the conditional updates converges in one sweep, so solver
+    iterations shrink as training stabilises.  Every returned row comes from
+    :func:`_pick_topk_budget`, so the budget constraint holds regardless of
+    the init.
     Returns (masks (n,L) float32, objective value, n_iters).
     """
     n, L = G.shape
     budgets = np.broadcast_to(np.asarray(budgets, np.float64), (n,))
     costs = np.ones(L) if costs is None else np.asarray(costs, np.float64)
+    if init is not None and init.shape != (n, L):
+        raise ValueError(f"init shape {init.shape} != {(n, L)}")
     masks = init.copy().astype(np.float32) if init is not None else \
         np.stack([_pick_topk_budget(G[i], costs, budgets[i]) for i in range(n)])
 
@@ -92,7 +108,12 @@ def solve_icm(G: np.ndarray, budgets, lam: float, *,
 
 
 def solve_unified(G: np.ndarray, budgets, *, costs: np.ndarray | None = None):
-    """λ→∞: shared ranking by aggregate gradient norm; per-client prefix."""
+    """λ→∞: shared ranking by aggregate gradient norm; per-client prefix.
+
+    The prefix scan only takes layers that fit the remaining budget, so
+    R(m_i) ≤ R_i holds for every client; a budget that admits no layer at
+    all yields the empty row (same contract as :func:`_pick_topk_budget`).
+    """
     n, L = G.shape
     budgets = np.broadcast_to(np.asarray(budgets, np.float64), (n,))
     costs = np.ones(L) if costs is None else np.asarray(costs, np.float64)

@@ -119,6 +119,13 @@ class SyntheticFederatedData:
         self._rngs = [np.random.RandomState(cfg.seed * 1000 + 7 * i + 1)
                       for i in range(cfg.n_clients)]
         self._test_rng = np.random.RandomState(cfg.seed + 999)
+        # cross-round per-client stream bookkeeping: samples drawn from each
+        # client's rng stream so far.  The depth-k round scheduler prefetches
+        # rounds ahead of wall-clock execution; equality of these counters
+        # (and of the streams' final states) across scheduled and synchronous
+        # runs is the observable half of the stream-order parity contract
+        # (tests/test_scheduler.py).
+        self._stream_draws = np.zeros(cfg.n_clients, np.int64)
 
         if cfg.modality == "patches":
             # class prototypes in patch-embedding space + per-domain style
@@ -329,8 +336,14 @@ class SyntheticFederatedData:
             return self._sample_legacy(rng, label_p, domain, n)
         return self._sample_vec(rng, label_p, domain, n)
 
+    def stream_positions(self) -> np.ndarray:
+        """(n_clients,) samples drawn per client stream so far — the
+        cross-round bookkeeping the scheduler parity tests compare."""
+        return self._stream_draws.copy()
+
     def client_batch(self, i: int, batch_size: int) -> dict:
         """One minibatch from client i's distribution."""
+        self._stream_draws[i] += batch_size
         return self._dispatch(self._rngs[i], self.client_label_p[i],
                               self.client_domain[i], batch_size)
 
@@ -344,6 +357,7 @@ class SyntheticFederatedData:
         if self.legacy_sampling:
             bs = [self.client_batch(i, batch_size) for _ in range(n)]
             return {k: np.stack([b[k] for b in bs]) for k in bs[0]}
+        self._stream_draws[i] += n * batch_size
         flat = self._sample_vec(self._rngs[i], self.client_label_p[i],
                                 self.client_domain[i], n * batch_size)
         return {k: v.reshape((n, batch_size) + v.shape[1:])

@@ -9,6 +9,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.api.task import DirichletTaskConfig, DirichletTokenMixtureTask
 from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
 from repro.core.server import FLServer
 from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
@@ -130,3 +131,37 @@ def test_pipelined_run_matches_synchronous(world, period):
                                   - np.asarray(b, np.float32)).max()),
         p_pipe, p_sync)))
     assert err < 1e-5, f"pipelined param divergence {err}"
+
+
+@pytest.mark.parametrize("depth,period", [(1, 1), (3, 1), (3, 2)])
+def test_pipelined_hooks_match_synchronous(world, depth, period):
+    """Availability + straggler hooks consume the server rng at the plan
+    stage, which pins when the scheduler may fire plan_round(t+1): the
+    depth-k pipeline must still draw bit-identical cohorts and masks versus
+    the synchronous loop."""
+    model, params, _ = world
+    dcfg = DirichletTaskConfig(n_clients=12, vocab_size=model.cfg.vocab_size,
+                               seq_len=8, test_samples=32, availability=0.5,
+                               straggler_rate=0.3, seed=4)
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=5, local_steps=1,
+                  lr=0.01, batch_size=4, strategy="ours", budget=2,
+                  selection_period=period, lam=1.0, seed=19)
+    p_pipe, h_pipe = FLServer(model, fl, DirichletTokenMixtureTask(dcfg),
+                              pipeline=True,
+                              pipeline_depth=depth).run(params)
+    p_sync, h_sync = FLServer(model, fl, DirichletTokenMixtureTask(dcfg),
+                              pipeline=False).run(params)
+    assert len(h_pipe.records) == len(h_sync.records) == 5
+    shrunk = False
+    for rp, rs in zip(h_pipe.records, h_sync.records):
+        np.testing.assert_array_equal(rp.cohort, rs.cohort)
+        np.testing.assert_array_equal(rp.mask_matrix, rs.mask_matrix)
+        assert rp.train_loss == pytest.approx(rs.train_loss, abs=1e-5)
+        assert rp.test_loss == pytest.approx(rs.test_loss, abs=1e-5)
+        shrunk = shrunk or len(rp.cohort) < 4
+    assert shrunk, "straggler hook never fired — test lost its teeth"
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(np.abs(np.asarray(a, np.float32)
+                                  - np.asarray(b, np.float32)).max()),
+        p_pipe, p_sync)))
+    assert err < 1e-5, f"hooked pipelined param divergence {err}"

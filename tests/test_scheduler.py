@@ -1,0 +1,306 @@
+"""RoundScheduler: depth-k parity, async solve state, verbose overlap,
+plan-stage guards, and cross-round stream bookkeeping.
+
+The engine-parity suite (tests/test_round_engine.py) pins the pipelined
+path against the synchronous loop; this file covers the scheduler's own
+contracts: lookahead depth as a pure scheduling knob, the host-solver
+warm-start/memo counters, ``wall_s`` host-time semantics, verbose printing
+decoupled from materialisation, and the empty/undersized-pool guards.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Experiment
+from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
+from repro.core.scheduler import RoundScheduler
+from repro.core.server import FLServer
+from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
+from repro.models.model import Model
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = reduced(get_arch("xlm_roberta_base"), n_layers=4, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    task = FederatedTaskConfig(
+        n_clients=12, n_classes=10, vocab_size=cfg.vocab_size, seq_len=8,
+        samples_per_client=16, skew="label", objective="classification")
+    return model, params, task
+
+
+def _records_equal(h_a, h_b, atol=1e-5):
+    assert len(h_a.records) == len(h_b.records)
+    for ra, rb in zip(h_a.records, h_b.records):
+        np.testing.assert_array_equal(ra.cohort, rb.cohort)
+        np.testing.assert_array_equal(ra.mask_matrix, rb.mask_matrix)
+        assert ra.train_loss == pytest.approx(rb.train_loss, abs=atol)
+        assert ra.test_loss == pytest.approx(rb.test_loss, abs=atol)
+
+
+def _params_close(p_a, p_b, atol=1e-5):
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(np.abs(np.asarray(a, np.float32)
+                                  - np.asarray(b, np.float32)).max()),
+        p_a, p_b)))
+    assert err < atol, f"param divergence {err}"
+
+
+# ---------------------------------------------------------------------------
+# Depth-k is a pure scheduling change
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth,period", [(1, 1), (2, 1), (4, 1), (3, 2)])
+def test_depth_k_matches_synchronous(world, depth, period):
+    """Any lookahead depth: cohorts/masks bit-identical to the synchronous
+    loop, params within fp, per-client data streams consumed identically."""
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=5, local_steps=2,
+                  lr=0.01, batch_size=4, strategy="ours", budget=2,
+                  selection_period=period, lam=1.0, seed=17)
+    data_p = SyntheticFederatedData(task)
+    data_s = SyntheticFederatedData(task)
+    p_pipe, h_pipe = FLServer(model, fl, data_p, pipeline=True,
+                              pipeline_depth=depth).run(params)
+    p_sync, h_sync = FLServer(model, fl, data_s, pipeline=False).run(params)
+    _records_equal(h_pipe, h_sync)
+    _params_close(p_pipe, p_sync)
+    # cross-round stream bookkeeping: the scheduler drew exactly the same
+    # number of samples from every client stream as the synchronous loop
+    np.testing.assert_array_equal(data_p.stream_positions(),
+                                  data_s.stream_positions())
+    assert data_p.stream_positions().sum() > 0
+
+
+@pytest.mark.parametrize("strategy", ["top", "rgn"])
+def test_depth_k_probe_free_and_score_strategies(world, strategy):
+    """Lookahead with no host solve (positional / device-scored): still a
+    pure scheduling change."""
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=4, local_steps=1,
+                  lr=0.01, batch_size=4, strategy=strategy, budget=2,
+                  lam=1.0, seed=23)
+    p_pipe, h_pipe = FLServer(model, fl, SyntheticFederatedData(task),
+                              pipeline=True, pipeline_depth=3).run(params)
+    p_sync, h_sync = FLServer(model, fl, SyntheticFederatedData(task),
+                              pipeline=False).run(params)
+    _records_equal(h_pipe, h_sync)
+    _params_close(p_pipe, p_sync)
+
+
+def test_experiment_pipeline_depth_knob(world):
+    model, params, task = world
+    exp = Experiment(model, SyntheticFederatedData(task), "ours",
+                     rounds=3, cohort_size=4, local_steps=1, batch_size=4,
+                     budget=2, lam=1.0, seed=3, pipeline_depth=3)
+    assert exp.build().pipeline_depth == 3
+    _, hist = exp.run(params)
+    assert len(hist.records) == 3
+
+
+def test_depth_validation(world):
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=1)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        FLServer(model, fl, SyntheticFederatedData(task), pipeline_depth=0)
+    server = FLServer(model, fl, SyntheticFederatedData(task))
+    with pytest.raises(ValueError, match="depth"):
+        RoundScheduler(server, depth=0)
+
+
+# ---------------------------------------------------------------------------
+# Host-solver acceleration: warm start + unchanged-utilities early exit
+# ---------------------------------------------------------------------------
+
+def test_select_round_memo_and_warm_cache(world):
+    """Byte-identical (cohort, budgets, stats) skips the (P1) solve; the
+    warm-mask cache tracks every selected client id."""
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=1, local_steps=1,
+                  batch_size=4, strategy="ours", budget=2, lam=1.0, seed=0)
+    server = FLServer(model, fl, SyntheticFederatedData(task))
+    cohort = np.array([1, 4, 7])
+    plan = server._plan_for(cohort, t=0)
+    rng = np.random.RandomState(0)
+    stats = {"grad_sq_norms":
+             np.abs(rng.randn(len(plan.probe_ids), server.L))
+             .astype(np.float32)}
+    m1 = server.select_round(plan, stats)
+    assert server.select_stats == {"solves": 1, "memo_hits": 0}
+    assert set(server._warm_masks) == {1, 4, 7}
+    m2 = server.select_round(plan, stats)          # identical inputs
+    assert server.select_stats == {"solves": 1, "memo_hits": 1}
+    np.testing.assert_array_equal(m1, m2)
+    # changed utilities invalidate the memo
+    stats2 = {"grad_sq_norms": stats["grad_sq_norms"] + 1.0}
+    server.select_round(plan, stats2)
+    assert server.select_stats["solves"] == 2
+
+
+def test_round_dependent_host_strategy_is_never_memoized(world):
+    """A custom host strategy that does NOT declare memoizable_select must
+    be re-run even on byte-identical inputs (it may depend on ctx.round)."""
+    from repro.api import Strategy
+
+    class _Annealed(Strategy):
+        name = "test_annealed"
+        host = True
+        probe_requirements = frozenset({"grad_sq_norms"})
+
+        def select(self, probe, budgets, ctx):
+            masks = np.zeros((probe.n, probe.L), np.float32)
+            masks[:, ctx.round % probe.L] = 1.0       # round-dependent
+            return masks
+
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=3, rounds=1, local_steps=1,
+                  batch_size=4, budget=1, lam=1.0, seed=0)
+    server = FLServer(model, fl, SyntheticFederatedData(task),
+                      strategy=_Annealed())
+    cohort = np.array([2, 5, 8])
+    stats = {"grad_sq_norms":
+             np.ones((3, server.L), np.float32)}
+    m0 = server.select_round(server._plan_for(cohort, t=0), stats)
+    m1 = server.select_round(server._plan_for(cohort, t=1), stats)
+    assert server.select_stats == {"solves": 2, "memo_hits": 0}
+    assert not np.array_equal(m0, m1)     # the schedule actually advanced
+
+
+def test_warm_start_runs_stay_deterministic(world):
+    """The warm start is per-run state: two identical runs (fresh servers)
+    produce identical mask trajectories."""
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=4, local_steps=1,
+                  lr=0.01, batch_size=4, strategy="ours", budget=2,
+                  lam=1.0, seed=11)
+    _, h1 = FLServer(model, fl, SyntheticFederatedData(task),
+                     pipeline_depth=2).run(params)
+    _, h2 = FLServer(model, fl, SyntheticFederatedData(task),
+                     pipeline_depth=2).run(params)
+    _records_equal(h1, h2)
+    for rec in h1.records:      # warm-started solves stay budget-exact
+        assert np.all(rec.mask_matrix.sum(1) <= 2)
+
+
+# ---------------------------------------------------------------------------
+# Verbose: printing decoupled from materialisation; wall_s semantics
+# ---------------------------------------------------------------------------
+
+def test_verbose_pipelined_matches_quiet_and_prints_all_rounds(world, capsys):
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=3, local_steps=1,
+                  lr=0.01, batch_size=4, strategy="ours", budget=2,
+                  lam=1.0, seed=29)
+    _, h_quiet = FLServer(model, fl, SyntheticFederatedData(task),
+                          pipeline_depth=2).run(params, verbose=False)
+    capsys.readouterr()
+    _, h_verb = FLServer(model, fl, SyntheticFederatedData(task),
+                         pipeline_depth=2).run(params, verbose=True)
+    out = capsys.readouterr().out
+    # every round printed, in order, exactly once
+    printed = [line for line in out.splitlines() if line.startswith("[round")]
+    assert len(printed) == 3
+    assert [int(line.split("]")[0].split()[-1]) for line in printed] == [0, 1, 2]
+    _records_equal(h_verb, h_quiet)
+
+
+def test_pipelined_wall_s_is_host_time(world):
+    """Pipelined wall_s = per-round host time (dispatch + select), drain
+    excluded: the per-round times are disjoint sub-intervals of the run, so
+    their sum never exceeds the elapsed wall clock."""
+    model, params, task = world
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=4, local_steps=1,
+                  lr=0.01, batch_size=4, strategy="ours", budget=2,
+                  lam=1.0, seed=31)
+    server = FLServer(model, fl, SyntheticFederatedData(task),
+                      pipeline_depth=2)
+    t0 = time.time()
+    _, hist = server.run(params)
+    elapsed = time.time() - t0
+    walls = [r.wall_s for r in hist.records]
+    assert all(np.isfinite(w) and w >= 0 for w in walls)
+    assert sum(walls) <= elapsed + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Plan-stage guards: empty / undersized pools, straggler-shrunk cohorts
+# ---------------------------------------------------------------------------
+
+class _HookedData:
+    """Wrap a task with scripted availability/straggler hooks."""
+
+    def __init__(self, inner, pool_fn=None, keep_fn=None):
+        self._inner = inner
+        self.sizes = inner.sizes
+        self._pool_fn = pool_fn
+        self._keep_fn = keep_fn
+
+    def cohort_batches(self, cohort, batch_size, n):
+        return self._inner.cohort_batches(cohort, batch_size, n)
+
+    def test_batch(self, batch_size=None):
+        return self._inner.test_batch(batch_size)
+
+    def available_clients(self, t, rng):
+        return None if self._pool_fn is None else self._pool_fn(t)
+
+    def drop_stragglers(self, t, cohort, rng):
+        if self._keep_fn is None:
+            return np.ones(len(cohort), bool)
+        return self._keep_fn(t, cohort)
+
+
+def test_empty_pool_fails_at_plan_stage_with_cause(world):
+    model, params, task = world
+    data = _HookedData(SyntheticFederatedData(task), pool_fn=lambda t: [])
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=2, local_steps=1,
+                  batch_size=4, strategy="ours", budget=2, lam=1.0)
+    for pipeline in (False, True):
+        server = FLServer(model, fl, data, pipeline=pipeline)
+        with pytest.raises(ValueError, match="empty pool for round 0"):
+            server.run(params)
+
+
+@pytest.mark.parametrize("pipeline", [False, True])
+def test_singleton_pool_reaches_every_stage(world, pipeline):
+    """An undersized pool (1 client) must flow through probe / select /
+    update / eval without shape errors, in both scheduling modes."""
+    model, params, task = world
+    data = _HookedData(SyntheticFederatedData(task),
+                       pool_fn=lambda t: [t % 12])
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=3, local_steps=1,
+                  lr=0.01, batch_size=4, strategy="ours", budget=2, lam=1.0)
+    _, hist = FLServer(model, fl, data, pipeline=pipeline,
+                       pipeline_depth=2).run(params)
+    assert len(hist.records) == 3
+    for rec in hist.records:
+        assert len(rec.cohort) == 1
+        assert rec.mask_matrix.shape == (1, model.n_selectable)
+        assert 1 <= rec.mask_matrix.sum() <= 2
+        assert np.isfinite(rec.test_loss) and np.isfinite(rec.train_loss)
+        assert rec.uploaded_params > 0
+
+
+@pytest.mark.parametrize("engine", ["vectorized", "sequential"])
+def test_straggler_shrunk_cohort_reaches_every_stage(world, engine):
+    """Stragglers shrinking the drawn cohort to one member must reach every
+    stage; dropping *everyone* keeps the full cohort (documented guard)."""
+    model, params, task = world
+
+    def keep(t, cohort):
+        k = np.zeros(len(cohort), bool)
+        if t % 2 == 0:
+            k[0] = True          # shrink to a single member
+        return k                 # odd rounds: nobody reports -> keep all
+
+    data = _HookedData(SyntheticFederatedData(task), keep_fn=keep)
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=2, local_steps=1,
+                  lr=0.01, batch_size=4, strategy="ours", budget=2, lam=1.0)
+    _, hist = FLServer(model, fl, data, engine=engine).run(params)
+    assert [len(r.cohort) for r in hist.records] == [1, 4]
+    for rec in hist.records:
+        assert np.isfinite(rec.test_loss)
+        assert np.all(rec.mask_matrix.sum(1) <= 2)

@@ -69,3 +69,45 @@ def test_costs_knapsack():
     masks, _, _ = solve_icm(G, budgets=2.0, lam=0.0, costs=costs)
     # layer 0 too expensive (cost 4 > 2); pick layers 1 then 2
     np.testing.assert_array_equal(masks, [[0, 1, 1]])
+
+
+def test_budget_admitting_no_layer_yields_empty_mask():
+    """Regression: when R_i admits not even the cheapest layer the old
+    fallback forced argmin(costs) anyway, silently violating R(m_i) <= R_i.
+    The constraint is hard — the client sits the round out (empty mask)."""
+    G = np.array([[10.0, 5.0, 1.0], [1.0, 2.0, 3.0]])
+    costs = np.array([4.0, 3.0, 5.0])
+    masks, _, _ = solve_icm(G, budgets=np.array([2.0, 3.0]), lam=1.0,
+                            costs=costs)
+    np.testing.assert_array_equal(masks[0], [0, 0, 0])   # nothing fits R=2
+    np.testing.assert_array_equal(masks[1], [0, 1, 0])   # only cost-3 fits
+    assert np.all(masks @ costs <= np.array([2.0, 3.0]) + 1e-9)
+
+
+def test_unified_budget_admitting_no_layer_yields_empty_mask():
+    """solve_unified has the same hard-constraint contract (audit)."""
+    G = np.abs(np.random.RandomState(2).randn(3, 4))
+    costs = np.array([3.0, 3.0, 4.0, 5.0])
+    masks = solve_unified(G, budgets=np.array([2.0, 3.0, 6.0]), costs=costs)
+    np.testing.assert_array_equal(masks[0], np.zeros(4))
+    assert masks[1].sum() == 1.0                          # one cost-3 layer
+    assert np.all(masks @ costs <= np.array([2.0, 3.0, 6.0]) + 1e-9)
+
+
+def test_warm_start_converges_in_one_sweep_at_fixed_point():
+    """init= at a converged solution: one sweep, identical masks — the
+    round scheduler's warm start shrinks solver iterations as utilities
+    stabilise without changing the solution."""
+    rng = np.random.RandomState(7)
+    G = np.abs(rng.randn(6, 10))
+    cold, val, cold_iters = solve_icm(G, 2, lam=0.7)
+    warm, wval, warm_iters = solve_icm(G, 2, lam=0.7, init=cold)
+    np.testing.assert_array_equal(warm, cold)
+    assert warm_iters == 1 <= cold_iters
+    assert wval == pytest.approx(val)
+
+
+def test_warm_start_shape_validated():
+    G = np.abs(np.random.RandomState(0).randn(3, 5))
+    with pytest.raises(ValueError, match="init shape"):
+        solve_icm(G, 1, lam=0.0, init=np.zeros((2, 5), np.float32))
