@@ -1,21 +1,25 @@
-"""CI micro-benchmark gate: round_engine + full_round + probe_trim +
-pipeline_depth.
+"""CI micro-benchmark gate: round_engine + masked_backward + full_round +
+probe_trim + pipeline_depth.
 
     PYTHONPATH=src python -m benchmarks.micro_ci
 
 Runs the engine micro-benchmarks, records them to
 ``experiments/bench/BENCH_round_engine.json``,
+``experiments/bench/BENCH_masked_backward.json``,
 ``experiments/bench/BENCH_full_round.json``,
 ``experiments/bench/BENCH_probe_trim.json`` and
 ``experiments/bench/BENCH_pipeline_depth.json`` (uploaded as CI
 artifacts), and enforces the wall-clock budgets: the vectorized engine
 step must not be slower than the sequential oracle at any cohort size, the
-streaming pipeline's full round (sampling included) must not be slower
-than the pre-pipeline legacy path (no dispatch regression from the
-pluggable-API probe path), the requirements-trimmed probes must not be
-slower than the all-stats probe, and the depth-k lookahead scheduler must
-not be slower than the depth-1 double buffer (paired per-rep ratios).
-Exits non-zero on a budget violation.
+mask-aware engine must not be slower than the dense program at any
+frozen-prefix cut AND must beat it ≥1.5x at the deepest cut (the paper's
+partial-layer efficiency claim, DESIGN.md §7), the streaming pipeline's
+full round (sampling included) must not be slower than the pre-pipeline
+legacy path (no dispatch regression from the pluggable-API probe path),
+the requirements-trimmed probes must not be slower than the all-stats
+probe, and the depth-k lookahead scheduler must not be slower than the
+depth-1 double buffer (paired per-rep ratios).  Exits non-zero on a
+budget violation.
 """
 from __future__ import annotations
 
@@ -29,6 +33,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     from benchmarks.common import save_result
     from benchmarks.run import (full_round_benchmarks,
+                                masked_backward_benchmarks,
                                 pipeline_depth_benchmarks,
                                 probe_trim_benchmarks,
                                 round_engine_benchmarks)
@@ -36,6 +41,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     engine_rows = round_engine_benchmarks()
     save_result("BENCH_round_engine", {"rows": engine_rows})
+    masked = masked_backward_benchmarks()
+    save_result("BENCH_masked_backward", masked)
     full = full_round_benchmarks()
     save_result("BENCH_full_round", full)
     probe = probe_trim_benchmarks()
@@ -53,6 +60,30 @@ def main() -> None:
             failures.append(
                 f"round_engine c{cohort}: vectorized {vec['us_per_call']:.0f}us"
                 f" > sequential {seq['us_per_call']:.0f}us")
+    # the mask-aware engine strictly skips work the dense program does
+    # (frozen-prefix backward + embed/head/norm backward): it must not be
+    # slower at ANY cut (paired per-rep ratios; 10% CI-jitter headroom),
+    # and the deepest cut — backward reduced to one layer of L — must hold
+    # the paper's efficiency claim at ≥1.5x over dense
+    deepest = masked["cuts"][-1]
+    for cut in masked["cuts"]:
+        if masked[f"cut{cut}_ratio"] > 1.10:
+            failures.append(
+                f"masked_backward: cut={cut} paired ratio "
+                f"{masked[f'cut{cut}_ratio']:.2f} > 1.10 vs dense")
+    if 1.0 / masked[f"cut{deepest}_ratio"] < 1.5:
+        failures.append(
+            f"masked_backward: cut={deepest} speedup "
+            f"{1.0 / masked[f'cut{deepest}_ratio']:.2f}x < 1.5x vs dense")
+    # the gap must grow monotonically in frozen-prefix depth (a deeper cut
+    # skips strictly more backward); 5% slack absorbs paired-ratio jitter
+    ratios = [masked[f"cut{c}_ratio"] for c in masked["cuts"]]
+    for (c0, r0), (c1, r1) in zip(zip(masked["cuts"], ratios),
+                                  zip(masked["cuts"][1:], ratios[1:])):
+        if r1 > r0 + 0.05:
+            failures.append(
+                f"masked_backward: ratio not monotone in cut depth "
+                f"(cut={c1}: {r1:.2f} > cut={c0}: {r0:.2f})")
     if full["vectorized_us_per_round"] > full["legacy_us_per_round"]:
         failures.append(
             f"full_round: vectorized {full['vectorized_us_per_round']:.0f}us"
@@ -75,6 +106,9 @@ def main() -> None:
 
     print(f"full_round speedup over pre-pipeline path: "
           f"{full['speedup']:.2f}x")
+    print("masked_backward speedups vs dense: "
+          + ", ".join(f"cut={c}: {1.0 / masked[f'cut{c}_ratio']:.2f}x"
+                      for c in masked["cuts"]))
     print(f"probe trim (ours): paired ratio "
           f"{probe['ours_trimmed_ratio']:.2f} vs all-stats probe")
     print(f"pipeline depth-{pdepth['depth']}: paired ratio "
@@ -84,7 +118,8 @@ def main() -> None:
             print(f"BUDGET VIOLATION: {f}", file=sys.stderr)
         sys.exit(1)
     print("micro-benchmark budget: OK "
-          "(vectorized <= sequential, trimmed probe <= all-stats, "
+          "(vectorized <= sequential, masked <= dense at every cut and "
+          ">=1.5x at the deepest, trimmed probe <= all-stats, "
           "depth-k <= depth-1)")
 
 

@@ -39,7 +39,34 @@ def fmt_row(r: dict) -> str:
             f"{frac:>7.3f}")
 
 
+def masked_backward_expectations(L: int = 8, cuts=None) -> list[dict]:
+    """Backward-FLOPs-vs-cut expectations for the mask-aware engine
+    (DESIGN.md §7).
+
+    With a frozen prefix of depth ``cut``, block backward FLOPs scale as
+    (L − cut)/L and the train step (fwd:bwd ≈ 1:2 per block) is expected
+    to speed up by 3L / (L + 2(L − cut)) over the dense program — before
+    counting the embed/head/norm backward the mask-aware path also drops
+    (measured sweep: BENCH_masked_backward.json, CI-gated ≥ these
+    shapes' trend: monotone in cut, ≥1.5x at cut = L−1).
+    """
+    cuts = list(range(L + 1)) if cuts is None else list(cuts)
+    rows = []
+    print(f"\n=== Mask-aware engine: expected backward FLOPs vs prefix cut "
+          f"(L={L}) ===")
+    print(f"{'cut':>4s} {'bwd_frac':>9s} {'step_speedup':>13s}")
+    for cut in cuts:
+        frac = (L - cut) / L
+        speed = 3 * L / (L + 2 * (L - cut)) if cut < L else 3.0
+        rows.append({"cut": cut, "bwd_frac": frac, "step_speedup": speed})
+        print(f"{cut:>4d} {frac:>9.3f} {speed:>12.2f}x")
+    print("(forward always runs all L layers; probes stay dense — "
+          "selection needs utilities for frozen layers too)")
+    return rows
+
+
 def main(mesh: str | None = "16x16"):
+    masked_backward_expectations()
     reports = load_reports(mesh)
     if not reports:
         print(f"(roofline: no dry-run reports found under {DRYRUN_DIR} — "

@@ -83,6 +83,8 @@ def micro_benchmarks():
 
     # round engine: sequential per-client loop vs the fused vmap round step
     round_engine_benchmarks()
+    # mask-aware engine: frozen-prefix backward skipping vs the dense path
+    masked_backward_benchmarks()
     # full round including host-side sampling: pre-PR scalar path vs the
     # vectorized sampler + streaming pipeline
     full_round_benchmarks()
@@ -167,6 +169,77 @@ def round_engine_benchmarks() -> list[dict]:
                          "engine": engine, "cohort": cohort_n,
                          "us_per_call": us, "derived": derived})
     return rows
+
+
+def masked_backward_benchmarks(cohort_n: int = 8) -> dict:
+    """Warm µs per cohort update: mask-aware engine vs the dense program,
+    sweeping the frozen-prefix depth (cut ∈ {0, L/2, L−1}).
+
+    Both rows run ``Client.cohort_update_raw`` on identical pre-drawn
+    batches and identical masks (every layer ≥ cut selected); the only
+    change is ``cut`` — dense (None) differentiates all L layers and zeroes
+    frozen gradients afterwards, mask-aware skips the frozen prefix's
+    backward, activations and scan-carry entirely (plus the always-frozen
+    embed/head/norm backward, which is why even cut=0 wins).  ``micro_ci``
+    gates mask-aware ≤ dense at every cut and ≥1.5× at cut = L−1 via the
+    median of *paired* per-rep ratios.  Returns a dict for
+    BENCH_masked_backward.json.
+    """
+    from repro.configs.base import (FLConfig, RuntimeConfig, get_arch,
+                                    reduced)
+    from repro.core.client import Client
+    from repro.data.synthetic import (FederatedTaskConfig,
+                                      SyntheticFederatedData)
+    from repro.models.model import Model
+
+    cfg = reduced(get_arch("xlm_roberta_base"), n_layers=8, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    L = model.n_selectable
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=20, n_classes=10, vocab_size=cfg.vocab_size, seq_len=8,
+        samples_per_client=16, skew="label", objective="classification"))
+    fl = FLConfig(n_clients=20, local_steps=2, lr=0.01, batch_size=4)
+    client = Client(model)
+    cohort = np.arange(cohort_n)
+    sizes = data.sizes[cohort]
+    batches = data.cohort_batches(cohort, fl.batch_size, fl.local_steps)
+    reps = 2 if FAST else 10
+    cuts = (0, L // 2, L - 1)
+    out: dict = {"cohort": cohort_n, "L": L, "reps": reps, "cuts": list(cuts)}
+
+    def masks_for(cut):
+        m = np.zeros((cohort_n, L), np.float32)
+        m[:, cut:] = 1.0
+        return m
+
+    for cut in cuts:                         # warmup: compile both variants
+        m = masks_for(cut)
+        jax.block_until_ready(client.cohort_update_raw(
+            params, batches, m, sizes, fl.lr)[0])
+        jax.block_until_ready(client.cohort_update_raw(
+            params, batches, m, sizes, fl.lr, cut=cut)[0])
+
+    for cut in cuts:
+        m = masks_for(cut)
+        dense_t, masked_t = [], []
+        for _ in range(reps):                # interleave: paired reps
+            for which, times in (("dense", dense_t), ("masked", masked_t)):
+                t0 = time.perf_counter()
+                p, _ = client.cohort_update_raw(
+                    params, batches, m, sizes, fl.lr,
+                    cut=None if which == "dense" else cut)
+                jax.block_until_ready(p)
+                times.append(time.perf_counter() - t0)
+        dense_t, masked_t = np.asarray(dense_t), np.asarray(masked_t)
+        ratio = float(np.median(masked_t / dense_t))   # paired per-rep
+        out[f"cut{cut}_dense_us"] = float(np.min(dense_t) * 1e6)
+        out[f"cut{cut}_masked_us"] = float(np.min(masked_t) * 1e6)
+        out[f"cut{cut}_ratio"] = ratio
+        print(f"masked_backward_cut{cut}_c{cohort_n},"
+              f"{out[f'cut{cut}_masked_us']:.1f},"
+              f"{1.0 / ratio:.2f}x_vs_dense")
+    return out
 
 
 def probe_trim_benchmarks(cohort_n: int = 8) -> dict:

@@ -47,6 +47,7 @@ class Experiment:
                  engine: str = "vectorized",
                  pipeline: Optional[bool] = None,
                  pipeline_depth: int = 1,
+                 mask_aware: Optional[bool] = None,
                  pretrain_steps: int = 0, pretrain_lr: float = 3e-3,
                  seed: Optional[int] = None,
                  **fl_overrides):
@@ -71,6 +72,9 @@ class Experiment:
         self.engine = engine
         self.pipeline = pipeline
         self.pipeline_depth = pipeline_depth
+        # None = auto: the mask-aware (frozen-prefix-skipping) update
+        # program wherever the family supports it (DESIGN.md §7)
+        self.mask_aware = mask_aware
         self.pretrain_steps = pretrain_steps
         self.pretrain_lr = pretrain_lr
         self._server: Optional[FLServer] = None
@@ -83,7 +87,8 @@ class Experiment:
                                     engine=self.engine,
                                     pipeline=self.pipeline,
                                     pipeline_depth=self.pipeline_depth,
-                                    strategy=self.strategy)
+                                    strategy=self.strategy,
+                                    mask_aware=self.mask_aware)
         return self._server
 
     @property

@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.masks import aggregation_weights
-from repro.models.model import layer_layout, split_mask, split_mask_matrix
+from repro.models.model import (layer_layout, segment_cuts, split_mask,
+                                split_mask_matrix)
 
 Array = jax.Array
 PyTree = Any
@@ -94,3 +95,55 @@ def aggregate_stacked(deltas: PyTree, weights: Array, cfg) -> PyTree:
 def apply_update(params: PyTree, update: PyTree, lr: float) -> PyTree:
     """Eq. (6): θ^{t+1} = θ^t − η Δ^t."""
     return jax.tree.map(lambda p, u: (p - lr * u.astype(p.dtype)), params, update)
+
+
+# ---------------------------------------------------------------------------
+# Mask-aware (prefix-cut) aggregation: Eq. (5)-(6) over the trainable slice
+# ---------------------------------------------------------------------------
+
+def aggregate_stacked_suffix(deltas: PyTree, weights: Array, cut: int,
+                             cfg) -> PyTree:
+    """Eq. (5) over the *trainable suffix* only (DESIGN.md §7).
+
+    ``deltas``: the ``trainable_slice``-shaped pytree with a leading (n,)
+    client axis, as produced by ``jax.vmap`` of the mask-aware local update
+    — each segment carries only its rows at or above the prefix cut.
+    ``weights``: the full (n, L) Eq.(7) matrix (frozen columns are all-zero
+    by construction, so nothing is lost by never contracting them).
+    Returns the suffix-shaped global update; the frozen prefix and the
+    non-selectable groups carry no update and are left to
+    :func:`apply_update_suffix` to pass through untouched.
+    """
+    parts = split_mask_matrix(weights, cfg)                  # path -> (n, c)
+    cuts = segment_cuts(cut, cfg)
+    out = {}
+    for key, sub in deltas.items():
+        w = parts[key][:, cuts[key]:]
+        out[key] = jax.tree.map(
+            lambda x, w=w: jnp.einsum("nc,nc...->c...", w,
+                                      x.astype(jnp.float32)), sub)
+    return out
+
+
+def apply_update_suffix(params: PyTree, update: PyTree, lr: float, cut: int,
+                        cfg) -> PyTree:
+    """Eq. (6) on the trainable suffix, scattered back into the full tree.
+
+    Matches :func:`apply_update` bit-for-bit: suffix rows get the identical
+    ``p − η·u`` expression; frozen rows — where the dense path computes
+    ``p − η·0 = p`` exactly — pass through untouched.
+    """
+    cuts = segment_cuts(cut, cfg)
+    out = {}
+    for key, sub in params.items():
+        if key not in update:
+            out[key] = sub
+            continue
+        c = cuts[key]
+
+        def upd(p, u, c=c):
+            new = p[c:] - lr * u.astype(p.dtype)
+            return new if c == 0 else jnp.concatenate([p[:c], new], axis=0)
+
+        out[key] = jax.tree.map(upd, sub, update[key])
+    return out

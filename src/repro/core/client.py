@@ -42,7 +42,9 @@ import numpy as np
 
 from repro.core import masks as M
 from repro.core.strategies import PROBE_KEYS
-from repro.models.model import Model, apply_layer_mask
+from repro.kernels import ops
+from repro.models.model import (Model, apply_layer_mask, segment_cuts,
+                                split_mask, trainable_slice)
 
 Array = jax.Array
 PyTree = Any
@@ -53,8 +55,37 @@ _JIT_CACHE: dict = {}
 _JIT_STATS = {"hits": 0, "misses": 0, "uncached": 0}
 
 def jit_cache_stats() -> dict:
-    """Hit/miss counters + entry count for the shared jit suite cache."""
-    return dict(_JIT_STATS, entries=len(_JIT_CACHE))
+    """Hit/miss counters + entry count for the shared jit suite cache, plus
+    per-entry-point compiled-program counts (``programs``): how many
+    distinct traces each suite function holds across every cached suite.
+    The mask-aware engine's entries are keyed on the static prefix cut, so
+    their counts are bounded by the number of distinct cuts seen — at most
+    L+1 — and must not grow round over round (tests/test_jit_cache.py).
+    """
+    programs: dict[str, int] = {}
+    for suite in _JIT_CACHE.values():
+        for name, fn in suite.items():
+            programs[name] = programs.get(name, 0) + fn._cache_size()
+    return dict(_JIT_STATS, entries=len(_JIT_CACHE), programs=programs)
+
+
+def masked_suffix_sgd(trainable: PyTree, grads: PyTree, mask: Array, lr,
+                      cut: int, cfg, *, mode: str | None = None) -> PyTree:
+    """Fused Eq.(3) apply on the trainable suffix slice — the mask-aware
+    τ-scan's hot-path call site for kernels/masked_update.py.
+
+    Each segment's stacked leaves get one row-mask-scaled AXPY
+    (θ ← θ − η·m(l)·g) through :func:`repro.kernels.ops.masked_sgd_update`:
+    the Pallas kernel on TPU, its bit-identical pure-jnp fallback elsewhere
+    (``mode`` forces either; tests/test_kernels.py pins the parity).
+    """
+    cuts = segment_cuts(cut, cfg)
+    mparts = split_mask(mask, cfg)
+    out = {}
+    for path, sub in trainable.items():
+        m = mparts[path][cuts[path]:]
+        out[path] = ops.masked_sgd_update(sub, grads[path], m, lr, mode=mode)
+    return out
 
 
 def clear_jit_cache() -> None:
@@ -95,10 +126,17 @@ class Client:
                 "probe": jax.jit(self._probe_impl, static_argnums=(2, 3)),
                 "eval": jax.jit(self._eval_impl),
                 "cohort_update": jax.jit(self._cohort_update_impl),
+                # mask-aware engine: one program variant per static prefix
+                # cut (≤ L+1 total; jit_cache_stats()["programs"] pins it)
+                "cohort_update_masked": jax.jit(
+                    self._cohort_update_masked_impl, static_argnums=(5,)),
                 "probe_cohort": jax.jit(self._probe_cohort_impl,
                                         static_argnums=(2, 3)),
                 "probe_update_cohort": jax.jit(self._probe_update_cohort_impl,
                                                static_argnums=(6, 7)),
+                "probe_update_cohort_masked": jax.jit(
+                    self._probe_update_cohort_masked_impl,
+                    static_argnums=(6, 7, 8)),
             }
             if key is None:
                 _JIT_STATS["uncached"] += 1
@@ -111,8 +149,15 @@ class Client:
         self._probe = suite["probe"]
         self._eval = suite["eval"]
         self._cohort_update = suite["cohort_update"]
+        self._cohort_update_masked = suite["cohort_update_masked"]
         self._probe_cohort = suite["probe_cohort"]
         self._probe_update_cohort = suite["probe_update_cohort"]
+        self._probe_update_cohort_masked = suite["probe_update_cohort_masked"]
+        # kernel dispatch for the masked hot path: the real Pallas kernels
+        # only when the runtime opts in (TPU), the bit-identical jnp
+        # fallback otherwise — pallas interpret mode inside a vmapped τ-scan
+        # would dominate the round on CPU
+        self._kernel_mode = "pallas" if model.runtime.use_pallas else "jnp"
 
     # -- Eq. (3)-(4): τ masked SGD steps, return accumulated update ---------
     def _local_update_impl(self, params: PyTree, batches: PyTree,
@@ -153,26 +198,88 @@ class Client:
         new_params = agg.apply_update(params, update, lr)
         return new_params, losses
 
-    def cohort_update_raw(self, params, batches, masks, sizes, lr):
+    # -- mask-aware cohort round: frozen-prefix split at a static cut --------
+    def _cohort_update_masked_impl(self, params: PyTree, batches: PyTree,
+                                   masks: Array, sizes: Array, lr: Array,
+                                   cut: int):
+        """The mask-aware engine's round step (DESIGN.md §7).
+
+        ``cut`` (static) is the round's prefix cut — the smallest layer any
+        cohort member trains.  The forward below it runs as a frozen
+        constant scan: no backward pass, no saved activations; embeddings,
+        head and norms (frozen by the paper) are likewise never
+        differentiated.  The τ-step scan carries only the trainable suffix
+        slice; Δ and the Eq.(5)-(7) aggregation are computed over that
+        slice and scattered back into the full tree.  One program compiles
+        per distinct cut (≤ L+1 variants), pinned by ``jit_cache_stats``.
+        """
+        from repro.core import aggregation as agg
+
+        model, cfg = self.model, self.cfg
+        if cut >= model.n_selectable:
+            # all-empty masks: nothing trains — forward-only losses (the
+            # dense path's zero-masked steps never move params either)
+            def one(b):
+                def step(carry, batch):
+                    return carry, model.loss(params, batch)
+                _, losses = jax.lax.scan(step, 0, b)
+                return jnp.mean(losses)
+
+            return params, jax.vmap(one)(batches)
+
+        tr0 = trainable_slice(params, cut, cfg)
+        mode = self._kernel_mode
+
+        def one(b, m):
+            def step(tr, batch):
+                loss, g = jax.value_and_grad(
+                    lambda t: model.loss(params, batch, trainable=t,
+                                         cut=cut))(tr)
+                new_tr = masked_suffix_sgd(tr, g, m, lr, cut, cfg, mode=mode)
+                return new_tr, loss
+
+            tr_fin, losses = jax.lax.scan(step, tr0, b)
+            delta = jax.tree.map(lambda a, z: (a - z).astype(jnp.float32) / lr,
+                                 tr0, tr_fin)
+            return delta, jnp.mean(losses)
+
+        deltas, losses = jax.vmap(one)(batches, masks)
+        weights = M.aggregation_weights(masks, sizes)        # (n, L), Eq. 7
+        update = agg.aggregate_stacked_suffix(deltas, weights, cut, self.cfg)
+        new_params = agg.apply_update_suffix(params, update, lr, cut,
+                                             self.cfg)
+        return new_params, losses
+
+    def cohort_update_raw(self, params, batches, masks, sizes, lr,
+                          cut: "int | None" = None):
         """Async variant: returns device arrays without forcing a sync, so
         the streaming pipeline can overlap host sampling with the in-flight
-        XLA program (jax dispatches asynchronously)."""
-        return self._cohort_update(
-            params, batches, jnp.asarray(masks, jnp.float32),
-            jnp.asarray(sizes, jnp.float32), jnp.asarray(lr, jnp.float32))
+        XLA program (jax dispatches asynchronously).
 
-    def cohort_update(self, params, batches, masks, sizes,
-                      lr) -> tuple[PyTree, np.ndarray]:
+        ``cut=None`` runs the dense program (every layer differentiated —
+        the pre-mask-aware behaviour); an integer cut dispatches the
+        mask-aware program for that frozen-prefix depth.
+        """
+        args = (params, batches, jnp.asarray(masks, jnp.float32),
+                jnp.asarray(sizes, jnp.float32), jnp.asarray(lr, jnp.float32))
+        if cut is None:
+            return self._cohort_update(*args)
+        return self._cohort_update_masked(*args, int(cut))
+
+    def cohort_update(self, params, batches, masks, sizes, lr,
+                      cut: "int | None" = None) -> tuple[PyTree, np.ndarray]:
         """One fused round step for the whole cohort.
 
         batches: pytree with leading (cohort, τ) axes (``cohort_batches``);
-        masks: (cohort, L); sizes: (cohort,) client dataset sizes d_i.
+        masks: (cohort, L); sizes: (cohort,) client dataset sizes d_i;
+        cut: optional static prefix cut (see :meth:`cohort_update_raw`).
         Returns (new global params, per-client mean local losses).  Matches
         the sequential local_update → aggregate → apply_update composition
-        within fp tolerance (see tests/test_round_engine.py).
+        within fp tolerance (see tests/test_round_engine.py) — with or
+        without the mask-aware cut (tests/test_masked_engine.py).
         """
         new_params, losses = self.cohort_update_raw(params, batches, masks,
-                                                    sizes, lr)
+                                                    sizes, lr, cut)
         return new_params, np.asarray(losses)
 
     # -- selection probe: layer-wise gradient stats on one batch ------------
@@ -194,10 +301,15 @@ class Client:
             out["grad_means"] = mean
             out["grad_vars"] = var
         elif "grad_sq_norms" in reqs:
-            out["grad_sq_norms"] = M.per_layer_sq_norms(g, self.cfg)
+            # the fused layer_grad_norm kernel (TPU) / its pinned jnp
+            # fallback — the probe itself stays dense across all L layers:
+            # next round's selection needs utilities for every layer,
+            # trained or not (DESIGN.md §7)
+            out["grad_sq_norms"] = M.per_layer_sq_norms(
+                g, self.cfg, mode=self._kernel_mode)
         if "param_sq_norms" in reqs:
-            out["param_sq_norms"] = M.per_layer_param_sq_norms(params,
-                                                               self.cfg)
+            out["param_sq_norms"] = M.per_layer_param_sq_norms(
+                params, self.cfg, mode=self._kernel_mode)
         return {k: v for k, v in out.items() if k in reqs}
 
     def probe(self, params, batch,
@@ -248,28 +360,51 @@ class Client:
                                         score_fn)
         return new_params, losses, stats
 
+    def _probe_update_cohort_masked_impl(self, params: PyTree, batches: PyTree,
+                                         masks: Array, sizes: Array, lr: Array,
+                                         probe_batches: PyTree, cut: int,
+                                         reqs: tuple = PROBE_KEYS,
+                                         score_fn=None):
+        new_params, losses = self._cohort_update_masked_impl(
+            params, batches, masks, sizes, lr, cut)
+        # the probe stays dense: selection utilities are needed for all L
+        # layers, including the ones this round froze
+        stats = self._probe_cohort_impl(new_params, probe_batches, reqs,
+                                        score_fn)
+        return new_params, losses, stats
+
     def probe_update_cohort_raw(self, params, batches, masks, sizes, lr,
                                 probe_batches, reqs: tuple = PROBE_KEYS,
-                                score_fn=None):
+                                score_fn=None, cut: "int | None" = None):
         """Cohort update + next-round probe as ONE XLA program (async).
 
-        probe_batches: (next_cohort, selection_batches, ...) pytree.  Returns
-        (new_params, losses, stats-dict) device arrays.
+        probe_batches: (next_cohort, selection_batches, ...) pytree;
+        cut: optional static prefix cut (see :meth:`cohort_update_raw`).
+        Returns (new_params, losses, stats-dict) device arrays.
         """
-        return self._probe_update_cohort(
-            params, batches, jnp.asarray(masks, jnp.float32),
-            jnp.asarray(sizes, jnp.float32), jnp.asarray(lr, jnp.float32),
-            probe_batches, tuple(reqs), score_fn)
+        args = (params, batches, jnp.asarray(masks, jnp.float32),
+                jnp.asarray(sizes, jnp.float32), jnp.asarray(lr, jnp.float32),
+                probe_batches)
+        if cut is None:
+            return self._probe_update_cohort(*args, tuple(reqs), score_fn)
+        return self._probe_update_cohort_masked(*args, int(cut), tuple(reqs),
+                                                score_fn)
 
     # -- evaluation -----------------------------------------------------------
     def _eval_impl(self, params: PyTree, batch: PyTree):
-        loss = self.model.loss(params, batch)
+        """One forward for both loss and accuracy: the hidden state is
+        computed once and shared between the loss tail
+        (``Model.loss_from_hidden``) and the accuracy logits — labeled
+        batches used to pay for ``model.loss`` *and* a second
+        ``forward_seq`` (regression test: tests/test_masked_engine.py)."""
+        model = self.model
+        h, aux, prefix_len = model.forward_seq(params, batch)
+        loss = model.loss_from_hidden(params, h, aux, prefix_len, batch)
         acc = jnp.zeros(())
         if "label" in batch:
-            cfg = self.model.cfg
-            h, _, _ = self.model.forward_seq(params, batch)
-            logits = self.model._head(params, jnp.mean(h, axis=1)[:, None])[:, 0]
-            acc = jnp.mean((jnp.argmax(logits, -1) == batch["label"]).astype(jnp.float32))
+            logits = model._head(params, jnp.mean(h, axis=1)[:, None])[:, 0]
+            acc = jnp.mean((jnp.argmax(logits, -1)
+                            == batch["label"]).astype(jnp.float32))
         return loss, acc
 
     def evaluate_raw(self, params, batch):

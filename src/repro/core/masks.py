@@ -30,6 +30,18 @@ def union_mask(mask_matrix: np.ndarray) -> np.ndarray:
     return (np.asarray(mask_matrix).sum(0) > 0).astype(np.float32)
 
 
+def first_trainable_layer(mask_matrix: np.ndarray) -> int:
+    """Host-side prefix cut for the mask-aware compute engine (DESIGN.md §7).
+
+    The smallest mask index any cohort member selects this round: layers
+    below it are frozen for *everyone*, so the round's update program can
+    skip their backward pass entirely.  An all-empty mask matrix returns L
+    (nothing trainable — the forward-only program variant).
+    """
+    cols = np.flatnonzero(np.asarray(mask_matrix).sum(0) > 0)
+    return int(cols[0]) if cols.size else int(np.asarray(mask_matrix).shape[-1])
+
+
 def aggregation_weights(mask_matrix: Array, sizes: Array) -> Array:
     """Eq. (7): w_{i,l} = d_i·m_i(l) / Σ_j d_j·m_j(l)   (0 where denom is 0).
 
@@ -57,31 +69,34 @@ def chi_divergence(weights: Array, alpha: Array) -> Array:
 # Per-layer gradient norms (the strategy inputs)
 # ---------------------------------------------------------------------------
 
-def per_layer_sq_norms(grads: Any, cfg) -> Array:
+def per_layer_sq_norms(grads: Any, cfg, *, mode: str | None = None,
+                       interpret: bool | None = None) -> Array:
     """‖g_{i,l}‖² for every selectable layer l — the L-vector clients upload.
 
     Works on the stacked-parameter layout: each segment's leaves carry a
-    leading (count,) axis; reduction is over all remaining axes.  The fused
-    Pallas kernel (kernels/layer_grad_norm.py) computes the same quantity.
+    leading (count,) axis; reduction is over all remaining axes.  This is
+    the probe reduction of the selection step, routed through the fused
+    Pallas kernel (kernels/layer_grad_norm.py via kernels.ops): the real
+    kernel on TPU, its bit-identical pure-jnp fallback elsewhere.  ``mode``
+    forces ``"pallas"``/``"jnp"`` (the kernel-parity tests pin both against
+    each other in interpret mode).
     """
+    from repro.kernels import ops
     from repro.models.model import layer_layout
     parts = []
     for seg in layer_layout(cfg):
         sub = grads[seg.path]
-        leaves = jax.tree.leaves(sub)
-        if seg.path == "shared_attn":   # unstacked single block
-            s = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
-            parts.append(s[None])
-        else:
-            s = sum(jnp.sum(jnp.square(x.astype(jnp.float32)),
-                            axis=tuple(range(1, x.ndim))) for x in leaves)
-            parts.append(s)
+        if seg.path == "shared_attn":   # unstacked single block: one row
+            sub = jax.tree.map(lambda x: x[None], sub)
+        parts.append(ops.layer_grad_norms(sub, mode=mode,
+                                          interpret=interpret))
     return jnp.concatenate(parts)
 
 
-def per_layer_param_sq_norms(params: Any, cfg) -> Array:
+def per_layer_param_sq_norms(params: Any, cfg, *, mode: str | None = None,
+                             interpret: bool | None = None) -> Array:
     """‖θ_l‖² per layer (for the RGN baseline)."""
-    return per_layer_sq_norms(params, cfg)
+    return per_layer_sq_norms(params, cfg, mode=mode, interpret=interpret)
 
 
 def per_layer_stats(grads: Any, cfg) -> tuple[Array, Array, Array]:

@@ -134,6 +134,10 @@ class RoundScheduler:
                 # unblock once select(t) has landed in the stats cache
                 self._prefetch(T, self.depth)
 
+                # mask-aware engine: the static prefix cut is derived from
+                # the just-solved masks, so the update program skips the
+                # frozen layers' backward (None = dense; DESIGN.md §7)
+                cut = srv._cut_for(masks)
                 nxt = self._queue[0] if self._queue else None
                 nstats = None
                 if fuse and nxt is not None and \
@@ -141,11 +145,11 @@ class RoundScheduler:
                     # round t+1's probe rides round t's update program
                     params, losses, nstats = client.probe_update_cohort_raw(
                         params, sampled.update_batches, masks, plan.sizes,
-                        fl.lr, nxt.probe_batches, reqs, score_fn)
+                        fl.lr, nxt.probe_batches, reqs, score_fn, cut=cut)
                 else:
                     params, losses = client.cohort_update_raw(
                         params, sampled.update_batches, masks, plan.sizes,
-                        fl.lr)
+                        fl.lr, cut=cut)
                     if nxt is not None and nxt.probe_batches is not None:
                         # chained on the params future: overlaps the update
                         # on-device, no host round-trip in between

@@ -66,8 +66,9 @@ from repro.configs.base import FLConfig
 from repro.core import aggregation as agg
 from repro.core import masks as M
 from repro.core.client import Client, probe_stats_dict
+from repro.core.solver import greedy_rows
 from repro.core.strategies import ProbeReport
-from repro.models.model import Model
+from repro.models.model import Model, supports_prefix_cut
 
 PyTree = Any
 
@@ -150,11 +151,19 @@ class FLServer:
                  engine: str = "vectorized",
                  pipeline: Optional[bool] = None,
                  pipeline_depth: int = 1,
-                 strategy: "Optional[Strategy | str]" = None):
+                 strategy: "Optional[Strategy | str]" = None,
+                 mask_aware: Optional[bool] = None):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
         if pipeline_depth < 1:
             raise ValueError(f"pipeline_depth must be >= 1, got {pipeline_depth}")
+        if mask_aware and not supports_prefix_cut(model.cfg):
+            raise ValueError(
+                f"mask_aware=True but family {model.cfg.family!r} has no "
+                f"prefix-cut path (models.model.supports_prefix_cut)")
+        if mask_aware and engine != "vectorized":
+            raise ValueError("mask_aware=True requires engine='vectorized' "
+                             "(the sequential oracle stays dense)")
         self.model = model
         self.fl = fl
         self.data = data
@@ -167,6 +176,13 @@ class FLServer:
         # (1 = the classic double buffer).
         self.pipeline = (engine == "vectorized") if pipeline is None else pipeline
         self.pipeline_depth = pipeline_depth
+        # mask-aware compute engine (DESIGN.md §7): the vectorized update
+        # skips the frozen-prefix backward, keyed on a static cut derived
+        # from the round's masks.  Auto: on wherever the family's compute
+        # order admits a prefix cut; the sequential oracle stays dense.
+        self.mask_aware = (engine == "vectorized"
+                           and supports_prefix_cut(model.cfg)
+                           if mask_aware is None else bool(mask_aware))
         self.L = model.n_selectable
         self.layer_costs = None      # optional per-layer cost vector for (P1)
         # registry-resolved strategy (fl.strategy is the back-compat string
@@ -200,7 +216,8 @@ class FLServer:
         # select_stats counts solves vs memo hits for tests/benchmarks.
         self._warm_masks: dict[int, np.ndarray] = {}
         self._select_memo: Optional[tuple] = None
-        self.select_stats = {"solves": 0, "memo_hits": 0}
+        self.select_stats = {"solves": 0, "memo_hits": 0,
+                             "partial_warm_starts": 0}
 
     @property
     def needs_probe(self) -> bool:
@@ -297,21 +314,44 @@ class FLServer:
         return {k: np.stack([r[k] for r in rows]) for k in rows[0]}
 
     # -- stage 4: select (host) ------------------------------------------
-    def _warm_init(self, cohort: np.ndarray) -> Optional[np.ndarray]:
+    def _warm_init(self, cohort: np.ndarray, probe: ProbeReport,
+                   budgets: np.ndarray) -> Optional[np.ndarray]:
         """Warm-start rows for an iterative host solve: the cohort's
-        previous converged masks, or None when any member is unseen (a
-        partial warm start would need the solver's own greedy fill)."""
+        previous converged masks.  Cohorts with *unseen* members no longer
+        bail to a full cold start — unseen rows are greedily filled with
+        the solver's own cold-start masks (``solver.greedy_rows`` on this
+        round's utilities), so one new client cannot discard every other
+        member's warm start (``select_stats["partial_warm_starts"]``
+        counts these rounds)."""
         if not self.strategy.host or not self._warm_masks:
             return None
         rows = [self._warm_masks.get(int(i)) for i in cohort]
-        if any(r is None for r in rows):
-            return None
+        missing = [r for r, v in enumerate(rows) if v is None]
+        if missing:
+            if probe.grad_sq_norms is None:
+                return None      # no utilities to greedy-fill from
+            G = np.asarray(probe.grad_sq_norms)
+            budgets = np.broadcast_to(np.asarray(budgets), (len(rows),))
+            fill = greedy_rows(G[missing], budgets[missing],
+                               costs=self.layer_costs)
+            for k, r in enumerate(missing):
+                rows[r] = fill[k]
+            self.select_stats["partial_warm_starts"] += 1
         return np.stack(rows)
 
-    def _memo_key(self, plan: RoundPlan, probe: ProbeReport) -> tuple:
+    def _memo_key(self, plan: RoundPlan, probe: ProbeReport,
+                  init: Optional[np.ndarray]) -> tuple:
         """Exact-inputs key for the host-solve memo: cohort ids, budgets, λ,
-        layer costs and every present probe stat, byte-compared (no fp
-        tolerance)."""
+        layer costs, every present probe stat AND the warm-start init rows,
+        byte-compared (no fp tolerance).
+
+        The init must be part of the key: an iterative solver that stopped
+        at ``max_iters`` without converging is *not* a pure function of the
+        other inputs — a replay would freeze masks a real (differently
+        warm-started) solve could still advance.  Since the warm rows are
+        the previous solve's output, the memo simply starts hitting one
+        round later, once the masks reach a fixed point.
+        """
         stat_bytes = tuple(
             (k, v.tobytes()) for k, v in (
                 (k, getattr(probe, k)) for k in (*ProbeReport.KEYS, "scores"))
@@ -320,7 +360,8 @@ class FLServer:
                  else np.asarray(self.layer_costs, np.float64).tobytes())
         return (np.asarray(plan.cohort, np.int64).tobytes(),
                 np.asarray(plan.budgets, np.float64).tobytes(),
-                float(self.fl.lam), costs, stat_bytes)
+                float(self.fl.lam), costs, stat_bytes,
+                None if init is None else init.astype(np.float32).tobytes())
 
     def select_round(self, plan: RoundPlan,
                      stats: Optional[dict[str, np.ndarray]]) -> np.ndarray:
@@ -347,14 +388,15 @@ class FLServer:
         ctx = SelectionContext(client_ids=np.asarray(plan.cohort),
                                round=plan.t, lam=fl.lam,
                                costs=self.layer_costs, n_layers=self.L,
-                               init=self._warm_init(plan.cohort))
+                               init=self._warm_init(plan.cohort, probe,
+                                                    plan.budgets))
         if not self.strategy.host:
             return self.strategy.select(probe, plan.budgets, ctx)
         # the early exit only applies to strategies declaring their select
         # round-independent (Strategy.memoizable_select) — a custom host
         # strategy with e.g. an annealing schedule must never be replayed
         memoizable = getattr(self.strategy, "memoizable_select", False)
-        key = self._memo_key(plan, probe) if memoizable else None
+        key = self._memo_key(plan, probe, ctx.init) if memoizable else None
         if memoizable and self._select_memo is not None \
                 and self._select_memo[0] == key:
             self.select_stats["memo_hits"] += 1
@@ -382,12 +424,20 @@ class FLServer:
         return self.select_round(plan, stats)
 
     # -- stage 5: update (device) ----------------------------------------
+    def _cut_for(self, masks: np.ndarray) -> Optional[int]:
+        """The round's static prefix cut for the mask-aware engine, or None
+        for the dense program.  Computed on host from the selected masks —
+        selection always completes before update dispatch, in both the
+        synchronous loop and the streaming scheduler."""
+        return M.first_trainable_layer(masks) if self.mask_aware else None
+
     def update_round(self, params: PyTree, sampled: SampledRound,
                      masks: np.ndarray) -> tuple[PyTree, np.ndarray]:
         fl, plan = self.fl, sampled.plan
         if self.engine == "vectorized":
             return self.client.cohort_update(params, sampled.update_batches,
-                                             masks, plan.sizes, fl.lr)
+                                             masks, plan.sizes, fl.lr,
+                                             cut=self._cut_for(masks))
         deltas, losses = [], []
         for row in range(len(plan.cohort)):
             batches = jax.tree.map(lambda x, row=row: x[row],

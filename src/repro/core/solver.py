@@ -53,6 +53,20 @@ def _pick_topk_budget(util: np.ndarray, costs: np.ndarray, budget: float) -> np.
     return m
 
 
+def greedy_rows(G: np.ndarray, budgets, *,
+                costs: np.ndarray | None = None) -> np.ndarray:
+    """Per-row greedy-knapsack masks — the ICM solver's cold-start init,
+    exposed so the round engines can greedily fill *unseen* members of a
+    warm-start matrix instead of discarding the whole cohort's warm rows
+    (FLServer._warm_init).  Budget-exact per row (:func:`_pick_topk_budget`).
+    """
+    n, L = G.shape
+    budgets = np.broadcast_to(np.asarray(budgets, np.float64), (n,))
+    costs = np.ones(L) if costs is None else np.asarray(costs, np.float64)
+    return np.stack([_pick_topk_budget(G[i], costs, budgets[i])
+                     for i in range(n)])
+
+
 def objective(G: np.ndarray, masks: np.ndarray, lam: float,
               penalty: str = "l1") -> float:
     """The (P1) objective value for a candidate mask matrix."""
@@ -86,7 +100,7 @@ def solve_icm(G: np.ndarray, budgets, lam: float, *,
     if init is not None and init.shape != (n, L):
         raise ValueError(f"init shape {init.shape} != {(n, L)}")
     masks = init.copy().astype(np.float32) if init is not None else \
-        np.stack([_pick_topk_budget(G[i], costs, budgets[i]) for i in range(n)])
+        greedy_rows(G, budgets, costs=costs)
 
     for it in range(max_iters):
         changed = False

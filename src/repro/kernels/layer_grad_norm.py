@@ -36,6 +36,30 @@ def _sqnorm_kernel(g_ref, out_ref, acc_scr, *, n_blocks: int):
         out_ref[0] = acc_scr[0, 0]
 
 
+def layer_sq_norms_2d_jnp(g: jax.Array, *, block: int = 4096) -> jax.Array:
+    """Pure-jnp fallback for :func:`layer_sq_norms_2d` — the off-TPU hot
+    path.  Replays the kernel's accumulation order exactly (per-block f32
+    sums, then a sequential left fold across blocks), so the two are
+    bit-identical (pinned in tests/test_kernels.py)."""
+    L, F = g.shape
+    blk = min(block, F)
+    pad = (-F) % blk
+    if pad:
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+    nb = (F + pad) // blk
+    gb = g.astype(jnp.float32).reshape(L, nb, blk)
+    per_block = jnp.sum(gb * gb, axis=2)               # (L, nb)
+    if nb == 1:
+        return per_block[:, 0]
+    # the kernel's sequential left fold across blocks, as an O(1)-size
+    # graph (an unrolled Python loop would emit nb adds per leaf)
+    return jax.lax.fori_loop(
+        1, nb,
+        lambda b, acc: acc + jax.lax.dynamic_index_in_dim(
+            per_block, b, axis=1, keepdims=False),
+        per_block[:, 0])
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def layer_sq_norms_2d(g: jax.Array, *, block: int = 4096,
                       interpret: bool = False) -> jax.Array:

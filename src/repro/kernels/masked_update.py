@@ -23,6 +23,19 @@ def _masked_update_kernel(mask_ref, lr_ref, p_ref, g_ref, out_ref):
     out_ref[...] = (p.astype(jnp.float32) - lr * m * g).astype(out_ref.dtype)
 
 
+def masked_sgd_update_2d_jnp(p: jax.Array, g: jax.Array, mask: jax.Array,
+                             lr) -> jax.Array:
+    """Pure-jnp fallback for :func:`masked_sgd_update_2d` — the off-TPU hot
+    path.  Elementwise with the kernel's exact expression order
+    ``p − ((lr·m)·g)`` in f32, so the two are bit-identical (pinned in
+    tests/test_kernels.py)."""
+    lr_ = jnp.asarray(lr, jnp.float32)
+    m = mask.astype(jnp.float32).reshape(
+        (mask.shape[0],) + (1,) * (p.ndim - 1))
+    return (p.astype(jnp.float32)
+            - lr_ * m * g.astype(jnp.float32)).astype(p.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def masked_sgd_update_2d(p: jax.Array, g: jax.Array, mask: jax.Array,
                          lr, *, block: int = 4096,

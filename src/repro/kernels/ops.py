@@ -25,6 +25,21 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _resolve_mode(mode: Optional[str], interpret: Optional[bool]) -> str:
+    """Kernel dispatch for the FL hot paths: ``"pallas"`` (the TPU kernel;
+    interpret mode off-TPU) or ``"jnp"`` (the pure-jnp fallback, pinned
+    bit-identical to the kernel).  ``None`` auto-selects: the real kernel
+    on TPU, the fallback elsewhere — unless ``interpret`` was passed
+    explicitly, which forces the kernel (the kernel-test path)."""
+    if mode is not None:
+        if mode not in ("pallas", "jnp"):
+            raise ValueError(f"mode must be 'pallas' or 'jnp', got {mode!r}")
+        return mode
+    if interpret is not None:
+        return "pallas"
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
 # ---------------------------------------------------------------------------
 # flash attention (model layout: q/k/v (B, S, H, D))
 # ---------------------------------------------------------------------------
@@ -69,14 +84,24 @@ def ssd(x, dt, A_log, Bmat, Cmat, D, *, chunk: int = 128,
 # ---------------------------------------------------------------------------
 
 def layer_grad_norms(stacked_grads: PyTree, *, block: int = 4096,
-                     interpret: Optional[bool] = None) -> jax.Array:
-    """Σ over leaves of row-wise ‖·‖² for (L, …) stacked leaves → (L,)."""
+                     interpret: Optional[bool] = None,
+                     mode: Optional[str] = None) -> jax.Array:
+    """Σ over leaves of row-wise ‖·‖² for (L, …) stacked leaves → (L,).
+
+    The probe reduction of the mask-aware engine (core/masks.py routes
+    ``per_layer_sq_norms`` here): the Pallas kernel on TPU, the
+    bit-identical pure-jnp fallback elsewhere (``mode`` forces either).
+    """
+    m = _resolve_mode(mode, interpret)
     it = _auto_interpret(interpret)
     total = None
     for leaf in jax.tree.leaves(stacked_grads):
         L = leaf.shape[0]
         flat = leaf.reshape(L, -1)
-        sq = _lgn.layer_sq_norms_2d(flat, block=block, interpret=it)
+        if m == "jnp":
+            sq = _lgn.layer_sq_norms_2d_jnp(flat, block=block)
+        else:
+            sq = _lgn.layer_sq_norms_2d(flat, block=block, interpret=it)
         total = sq if total is None else total + sq
     return total
 
@@ -87,10 +112,20 @@ def layer_grad_norms(stacked_grads: PyTree, *, block: int = 4096,
 
 def masked_sgd_update(stacked_params: PyTree, stacked_grads: PyTree,
                       mask: jax.Array, lr, *, block: int = 4096,
-                      interpret: Optional[bool] = None) -> PyTree:
+                      interpret: Optional[bool] = None,
+                      mode: Optional[str] = None) -> PyTree:
+    """Fused Eq.(3) apply θ_l ← θ_l − η·m(l)·g_l over a stacked pytree.
+
+    The apply step of the mask-aware engine's τ-scan (core/client.py):
+    the Pallas kernel on TPU, the bit-identical pure-jnp fallback
+    elsewhere (``mode`` forces either).
+    """
+    m = _resolve_mode(mode, interpret)
     it = _auto_interpret(interpret)
 
     def upd(p, g):
+        if m == "jnp":
+            return _mu.masked_sgd_update_2d_jnp(p, g, mask, lr)
         L = p.shape[0]
         out = _mu.masked_sgd_update_2d(p.reshape(L, -1), g.reshape(L, -1),
                                        mask, lr, block=block, interpret=it)

@@ -60,6 +60,51 @@ def layer_layout(cfg: ArchConfig) -> tuple[Segment, ...]:
     return tuple(segs)
 
 
+def supports_prefix_cut(cfg: ArchConfig) -> bool:
+    """Whether the mask-aware compute engine can split this family's forward
+    at a frozen-prefix layer index.
+
+    Requires the selectable-layer mask order to be a *prefix* of the compute
+    graph: true for the scanned stacks (dense/vlm/ssm/moe/audio).  False for
+    ``hybrid`` — zamba2's shared attention block is applied interleaved
+    through the whole depth, so layers below any cut still need gradients
+    whenever the shared block is trainable.
+    """
+    return cfg.family != "hybrid"
+
+
+def segment_cuts(cut: int, cfg: ArchConfig) -> dict[str, int]:
+    """Per-segment frozen-prefix lengths for a global mask-index ``cut``.
+
+    ``cut`` is in mask-index order (:func:`layer_layout`): segments entirely
+    below it are fully frozen (cut == count), the segment containing it is
+    split, segments above are fully trainable (cut == 0).
+    """
+    out, off = {}, 0
+    for seg in layer_layout(cfg):
+        out[seg.path] = min(max(int(cut) - off, 0), seg.count)
+        off += seg.count
+    return out
+
+
+def trainable_slice(params: PyTree, cut: int, cfg: ArchConfig) -> PyTree:
+    """Rows ``[cut_k:]`` of every selectable segment with trainable layers.
+
+    This is the pytree the mask-aware τ-step scan carries — frozen prefix
+    rows and the non-selectable groups (embed/head/norms) are excluded, so
+    they are closed over as constants and get neither backward passes nor
+    scan-carry traffic.  Fully frozen segments are omitted entirely.
+    """
+    cuts = segment_cuts(cut, cfg)
+    out = {}
+    for seg in layer_layout(cfg):
+        c = cuts[seg.path]
+        if c < seg.count:
+            out[seg.path] = jax.tree.map(lambda a, c=c: a[c:],
+                                         params[seg.path])
+    return out
+
+
 def split_mask(mask: Array, cfg: ArchConfig) -> dict[str, Array]:
     """Split an (L,)-mask into per-segment arrays keyed by param path."""
     out, off = {}, 0
@@ -315,9 +360,30 @@ class Model:
         return B.softcap(logits, cfg.logit_softcap)
 
     # -- sequence forward (train / prefill) ---------------------------------
+    def _split_scan(self, step, carry, full, idx, trainable, cut: int, rt):
+        """Scan ``step`` over a stacked segment, split at frozen-prefix ``cut``.
+
+        Dense path (``trainable is None``): one scan over ``full`` — exactly
+        the pre-split program.  Mask-aware path: rows ``[:cut]`` come from
+        ``full`` (constants w.r.t. the differentiated arguments, so AD saves
+        no residuals and emits no backward for them) and rows ``[cut:]``
+        come from ``trainable`` — the slice the τ-step scan carries.
+        """
+        f = _maybe_remat(step, rt)
+        if trainable is None:
+            carry, _ = lax.scan(f, carry, (full, idx))
+            return carry
+        if cut > 0:
+            prefix = jax.tree.map(lambda a: lax.stop_gradient(a[:cut]), full)
+            carry, _ = lax.scan(f, carry, (prefix, idx[:cut]))
+        if cut < idx.shape[0]:
+            carry, _ = lax.scan(f, carry, (trainable, idx[cut:]))
+        return carry
+
     def forward_seq(self, params: PyTree, batch: dict, *,
                     window_override: Optional[int] = None,
-                    layer_hook: Optional[Callable] = None):
+                    layer_hook: Optional[Callable] = None,
+                    trainable: Optional[PyTree] = None, cut: int = 0):
         """Full-sequence forward. Returns (hidden, aux_loss, prefix_len).
 
         ``layer_hook(per_layer_params, idx, segment)`` is applied to each
@@ -325,8 +391,18 @@ class Model:
         ZeRO-gather each layer inside the scan and apply the Eq.(7)
         grad-scale, so no more than one layer's full weights ever
         materialise per device (DESIGN.md §4).
+
+        ``trainable``/``cut`` select the mask-aware compute path (DESIGN.md
+        §7): each selectable segment's scan is split at the static mask
+        index ``cut`` — rows below it are read from ``params`` (frozen
+        constants), rows at or above it from ``trainable`` (the
+        :func:`trainable_slice` pytree the caller differentiates).  Only
+        families with ``supports_prefix_cut(cfg)`` accept a trainable slice.
         """
         cfg, rt = self.cfg, self.runtime
+        if trainable is not None and not supports_prefix_cut(cfg):
+            raise ValueError(f"family {cfg.family!r} has no prefix-cut path")
+        cuts = segment_cuts(cut, cfg) if trainable is not None else {}
         hook = layer_hook if layer_hook is not None else (lambda p, i, s: p)
         window = cfg.sliding_window if window_override is None else window_override
         aux = jnp.zeros((), jnp.float32)
@@ -335,7 +411,8 @@ class Model:
         if cfg.family == "audio":
             return self._whisper_seq(params, batch, window,
                                      layer_hook if layer_hook is not None
-                                     else (lambda p, i, s: p))
+                                     else (lambda p, i, s: p),
+                                     trainable=trainable, cuts=cuts)
 
         if cfg.family == "vlm":
             patches = batch["patches"].astype(params["embed"]["patch_proj"].dtype)
@@ -364,13 +441,16 @@ class Model:
                                         seq_chunk=rt.seq_chunk,
                                         remat_chunk=rt.remat_scores)
                 return self.shard(h, "act_bsd"), None
-            x, _ = lax.scan(_maybe_remat(step, rt), x,
-                            (params["blocks"],
-                             jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+            x = self._split_scan(step, x, params["blocks"],
+                                 jnp.arange(cfg.n_layers, dtype=jnp.int32),
+                                 None if trainable is None
+                                 else trainable.get("blocks"),
+                                 cuts.get("blocks", 0), rt)
 
         elif cfg.family == "moe":
             if cfg.first_dense:
-                def step0(carry, p):
+                def step0(carry, inp):
+                    p, _ = inp
                     if cfg.use_mla:
                         ao, _ = MLA.mla_fwd(_take(p, "attn_"), carry, cfg,
                                             positions=positions, window=window,
@@ -382,7 +462,12 @@ class Model:
                     h = carry + ao
                     h = h + B.mlp_fwd(_take(p, "mlp_"), h, cfg)
                     return self.shard(h, "act_bsd"), None
-                x, _ = lax.scan(_maybe_remat(step0, rt), x, params["dense0"])
+                x = self._split_scan(step0, x, params["dense0"],
+                                     jnp.arange(cfg.first_dense,
+                                                dtype=jnp.int32),
+                                     None if trainable is None
+                                     else trainable.get("dense0"),
+                                     cuts.get("dense0", 0), rt)
 
             def step(carry, inp):
                 p, idx = inp
@@ -395,9 +480,11 @@ class Model:
                                              moe_local=rt.moe_local_dispatch)
                 return (self.shard(h, "act_bsd"), a + aux_l), None
             nb = cfg.n_layers - cfg.first_dense
-            (x, aux), _ = lax.scan(_maybe_remat(step, rt), (x, aux),
-                                   (params["blocks"],
-                                    jnp.arange(nb, dtype=jnp.int32)))
+            (x, aux) = self._split_scan(step, (x, aux), params["blocks"],
+                                        jnp.arange(nb, dtype=jnp.int32),
+                                        None if trainable is None
+                                        else trainable.get("blocks"),
+                                        cuts.get("blocks", 0), rt)
 
         elif cfg.family == "ssm":
             def step(carry, inp):
@@ -405,9 +492,11 @@ class Model:
                 p = hook(p, idx, "blocks")
                 out, _ = SSD.mamba2_fwd(_take(p, "ssm_"), carry, cfg)
                 return self.shard(carry + out, "act_bsd"), None
-            x, _ = lax.scan(_maybe_remat(step, rt), x,
-                            (params["blocks"],
-                             jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+            x = self._split_scan(step, x, params["blocks"],
+                                 jnp.arange(cfg.n_layers, dtype=jnp.int32),
+                                 None if trainable is None
+                                 else trainable.get("blocks"),
+                                 cuts.get("blocks", 0), rt)
 
         elif cfg.family == "hybrid":
             x = self._zamba_seq(params, x, positions, window, hook)
@@ -446,7 +535,8 @@ class Model:
             x, _ = lax.scan(_maybe_remat(mamba_step, rt), x, (tail, idx_t))
         return x
 
-    def _whisper_seq(self, params, batch, window, hook=lambda p, i, s: p):
+    def _whisper_seq(self, params, batch, window, hook=lambda p, i, s: p,
+                     trainable: Optional[PyTree] = None, cuts: dict = {}):
         cfg, rt = self.cfg, self.runtime
         frames = batch["frames"].astype(params["embed"]["frame_proj"].dtype)
         e = frames @ params["embed"]["frame_proj"]
@@ -463,9 +553,11 @@ class Model:
                                     seq_chunk=rt.seq_chunk,
                                     remat_chunk=rt.remat_scores)
             return self.shard(h, "act_bsd"), None
-        e, _ = lax.scan(_maybe_remat(enc_step, rt), e,
-                        (params["enc_blocks"],
-                         jnp.arange(cfg.n_enc_layers, dtype=jnp.int32)))
+        e = self._split_scan(enc_step, e, params["enc_blocks"],
+                             jnp.arange(cfg.n_enc_layers, dtype=jnp.int32),
+                             None if trainable is None
+                             else trainable.get("enc_blocks"),
+                             cuts.get("enc_blocks", 0), rt)
         enc_out = B.rms_norm(e, params["enc_norm"], cfg.norm_eps)
 
         x = self._embed_tokens(params, batch["tokens"])
@@ -481,19 +573,30 @@ class Model:
                                     seq_chunk=rt.seq_chunk, cross_kv=cross_kv,
                                     remat_chunk=rt.remat_scores)
             return self.shard(h, "act_bsd"), None
-        x, _ = lax.scan(_maybe_remat(dec_step, rt), x,
-                        (params["blocks"],
-                         jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+        x = self._split_scan(dec_step, x, params["blocks"],
+                             jnp.arange(cfg.n_layers, dtype=jnp.int32),
+                             None if trainable is None
+                             else trainable.get("blocks"),
+                             cuts.get("blocks", 0), rt)
         return x, jnp.zeros((), jnp.float32), 0
 
     # -- losses --------------------------------------------------------------
     def loss(self, params: PyTree, batch: dict, *,
              window_override: Optional[int] = None,
-             layer_hook: Optional[Callable] = None) -> Array:
-        cfg = self.cfg
+             layer_hook: Optional[Callable] = None,
+             trainable: Optional[PyTree] = None, cut: int = 0) -> Array:
         h, aux, prefix_len = self.forward_seq(params, batch,
                                               window_override=window_override,
-                                              layer_hook=layer_hook)
+                                              layer_hook=layer_hook,
+                                              trainable=trainable, cut=cut)
+        return self.loss_from_hidden(params, h, aux, prefix_len, batch)
+
+    def loss_from_hidden(self, params: PyTree, h: Array, aux: Array,
+                         prefix_len: int, batch: dict) -> Array:
+        """The loss tail on an already-computed hidden state — shared by
+        :meth:`loss` and the single-forward eval (core/client.py), so eval
+        loss and accuracy come from one ``forward_seq`` call."""
+        cfg = self.cfg
         if cfg.task == "classification":
             pooled = jnp.mean(h, axis=1)
             logits = self._head(params, pooled[:, None])[:, 0].astype(jnp.float32)

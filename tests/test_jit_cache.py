@@ -59,6 +59,45 @@ def test_repeated_server_construction_zero_recompilation():
     assert h1.summary() == h2.summary() == h3.summary()
 
 
+def test_masked_engine_compile_stability():
+    """Mask-aware programs are keyed on the static prefix cut: with a fixed
+    budget pattern across rounds, the engine compiles at most one variant
+    per *distinct* cut seen, and repeated rounds / repeated servers with
+    the same configuration add zero recompiles (jit_cache_stats()).
+    """
+    from repro.core.masks import first_trainable_layer
+
+    model, params, task, fl = _world()
+    # fixed heterogeneous budget pattern; 'top' selects the highest R_i
+    # layers, so the round cut is L − max(cohort budgets) — at most two
+    # distinct cuts ever occur with this pattern
+    from dataclasses import replace
+    fl = replace(fl, strategy="top", budgets=(1, 2), budget=1, rounds=6)
+    client_mod.clear_jit_cache()
+
+    server = FLServer(model, fl, SyntheticFederatedData(task))
+    assert server.mask_aware
+    _, hist = server.run(params)
+    cuts = {first_trainable_layer(r.mask_matrix) for r in hist.records}
+    stats = client_mod.jit_cache_stats()
+    masked = {k: v for k, v in stats["programs"].items() if "masked" in k}
+    assert sum(masked.values()) >= 1, "mask-aware engine never dispatched"
+    for name, count in masked.items():
+        assert count <= len(cuts), \
+            f"{name}: {count} program variants for {len(cuts)} distinct cuts"
+
+    # zero per-round recompiles: more rounds and a fresh server over the
+    # same (ArchConfig, RuntimeConfig) reuse every compiled variant
+    server.run(params)
+    _, hist2 = FLServer(model, fl, SyntheticFederatedData(task)).run(params)
+    cuts2 = cuts | {first_trainable_layer(r.mask_matrix)
+                    for r in hist2.records}
+    assert cuts2 == cuts
+    after = client_mod.jit_cache_stats()["programs"]
+    for name, count in masked.items():
+        assert after[name] == count, f"{name} recompiled on repeated rounds"
+
+
 def test_custom_shard_models_bypass_cache():
     model, _, _, _ = _world()
     client_mod.clear_jit_cache()

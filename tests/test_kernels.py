@@ -93,6 +93,90 @@ def test_masked_update_sweep(L, F, dtype):
             np.testing.assert_array_equal(np.asarray(out[l]), np.asarray(p[l]))
 
 
+# ---------------------------------------------------------------------------
+# Kernel ⇄ jnp-fallback pins for the mask-aware hot path (DESIGN.md §7).
+# The FL hot paths call the kernels through dispatching wrappers (mode
+# "pallas" on TPU, the pure-jnp fallback elsewhere); these tests pin the two
+# implementations bit-identical under like-for-like jit compilation, so any
+# kernel/core drift fails CI (the examples smoke job runs this file's
+# masked_update/grad_norm oracles).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("L,F", NORM_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_layer_sq_norms_jnp_fallback_bit_identical(L, F, dtype):
+    """The fallback replays the kernel's per-block accumulation order, so
+    the results agree bit-for-bit (not just allclose)."""
+    from repro.kernels.layer_grad_norm import layer_sq_norms_2d_jnp
+    g = jax.random.normal(jax.random.PRNGKey(2), (L, F), dtype)
+    kernel = layer_sq_norms_2d(g, block=1024, interpret=True)
+    fallback = jax.jit(lambda g: layer_sq_norms_2d_jnp(g, block=1024))(g)
+    np.testing.assert_array_equal(np.asarray(kernel), np.asarray(fallback))
+
+
+@pytest.mark.parametrize("L,F", [(4, 64), (6, 1000), (3, 5000), (1, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_update_jnp_fallback_bit_identical(L, F, dtype):
+    """Same elementwise expression, same fusion: kernel (interpret) and the
+    jitted fallback produce bit-identical updates."""
+    from repro.kernels.masked_update import masked_sgd_update_2d_jnp
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    p = jax.random.normal(ks[0], (L, F), dtype)
+    g = jax.random.normal(ks[1], (L, F), dtype)
+    mask = (jax.random.uniform(ks[2], (L,)) > 0.5).astype(jnp.float32)
+    kernel = masked_sgd_update_2d(p, g, mask, 0.1, block=256, interpret=True)
+    fallback = jax.jit(masked_sgd_update_2d_jnp)(p, g, mask, 0.1)
+    np.testing.assert_array_equal(np.asarray(kernel, np.float32),
+                                  np.asarray(fallback, np.float32))
+
+
+def _small_world():
+    from repro.configs.base import RuntimeConfig, get_arch, reduced
+    from repro.models.model import Model
+    cfg = reduced(get_arch("tinyllama_1_1b"), n_layers=3, d_model=64)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab_size)}
+    return model, params, batch
+
+
+def test_hot_path_masked_sgd_site_kernel_parity():
+    """The masked engine's apply-step call site (client.masked_suffix_sgd):
+    Pallas kernel (interpret) vs the jnp fallback it runs off-TPU."""
+    from repro.core.client import masked_suffix_sgd
+    from repro.models.model import trainable_slice
+    model, params, batch = _small_world()
+    cfg = model.cfg
+    cut = 1
+    tr = trainable_slice(params, cut, cfg)
+    g = jax.grad(lambda t: model.loss(params, batch, trainable=t,
+                                      cut=cut))(tr)
+    mask = jnp.asarray([0.0, 1.0, 0.0], jnp.float32)
+    out_k = masked_suffix_sgd(tr, g, mask, 0.1, cut, cfg, mode="pallas")
+    out_j = jax.jit(lambda tr, g: masked_suffix_sgd(tr, g, mask, 0.1, cut,
+                                                    cfg, mode="jnp"))(tr, g)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), out_k, out_j)
+    # masked rows (mask 0 above the cut) unchanged exactly
+    jax.tree.map(lambda t, o: np.testing.assert_array_equal(
+        np.asarray(t[-1]), np.asarray(o[-1])), tr, out_j)
+
+
+def test_hot_path_probe_reduction_kernel_parity():
+    """The probe's grad-norm reduction call site (masks.per_layer_sq_norms
+    routed through ops.layer_grad_norms): kernel vs jnp fallback, pinned
+    bit-identical on a real gradient tree."""
+    from repro.core.masks import per_layer_sq_norms
+    model, params, batch = _small_world()
+    g = jax.grad(model.loss)(params, batch)
+    out_k = per_layer_sq_norms(g, model.cfg, mode="pallas", interpret=True)
+    out_j = jax.jit(lambda g: per_layer_sq_norms(g, model.cfg,
+                                                 mode="jnp"))(g)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_j))
+
+
 def test_ops_layer_grad_norms_matches_core():
     """The fused kernel equals core.masks.per_layer_sq_norms on a real tree."""
     from repro.configs.base import RuntimeConfig, get_arch, reduced

@@ -1,0 +1,358 @@
+"""Mask-aware compute engine (DESIGN.md §7): frozen-prefix backward skipping.
+
+The vectorized engine's update program is keyed on a static prefix cut —
+the smallest layer any cohort member trains — and must be a pure *compute*
+change: identical masks and fp-tolerant params versus both the dense
+vectorized program (cut=None) and the sequential paper-literal oracle, at
+every cut (including cut = L, the all-empty-mask forward-only variant) and
+at every pipeline depth.  Also covers the single-forward eval fix and the
+partial warm starts for cohorts with unseen members.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
+from repro.core import masks as M
+from repro.core.client import Client
+from repro.core.server import FLServer
+from repro.core.solver import greedy_rows
+from repro.core.strategies import ProbeReport
+from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
+from repro.models.model import (Model, segment_cuts, supports_prefix_cut,
+                                trainable_slice)
+
+
+def _max_err(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(np.abs(np.asarray(x, np.float32)
+                                  - np.asarray(y, np.float32)).max()), a, b)))
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = reduced(get_arch("xlm_roberta_base"), n_layers=4, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=12, n_classes=10, vocab_size=cfg.vocab_size, seq_len=8,
+        samples_per_client=16, skew="label", objective="classification"))
+    return model, params, data
+
+
+# ---------------------------------------------------------------------------
+# Client-level: masked program ≡ dense program at every cut
+# ---------------------------------------------------------------------------
+
+def test_cohort_update_matches_dense_at_every_cut(world):
+    """Sweep every prefix cut 0..L: the masked program must match the dense
+    program on params (fp) and per-client losses, with masks that actually
+    leave the prefix frozen (mask[:, :cut] == 0)."""
+    model, params, data = world
+    client = Client(model)
+    L = model.n_selectable
+    cohort = np.arange(4)
+    batches = data.cohort_batches(cohort, 4, 2)
+    sizes = data.sizes[cohort]
+    for cut in range(L + 1):
+        masks = np.zeros((4, L), np.float32)
+        masks[:, cut:] = 1.0
+        p_d, l_d = client.cohort_update(params, batches, masks, sizes, 0.01)
+        p_m, l_m = client.cohort_update(params, batches, masks, sizes, 0.01,
+                                        cut=cut)
+        assert _max_err(p_d, p_m) < 1e-5, f"cut={cut}"
+        np.testing.assert_allclose(l_m, l_d, atol=1e-5)
+
+
+def test_cohort_update_heterogeneous_masks_above_cut(world):
+    """The cut is the cohort *minimum*: members may train different subsets
+    above it (per-row masks still apply inside the suffix)."""
+    model, params, data = world
+    client = Client(model)
+    L = model.n_selectable
+    cohort = np.arange(3)
+    batches = data.cohort_batches(cohort, 4, 2)
+    sizes = data.sizes[cohort]
+    masks = np.array([[0, 1, 0, 1], [0, 0, 1, 1], [0, 1, 1, 0]], np.float32)
+    cut = M.first_trainable_layer(masks)
+    assert cut == 1
+    p_d, _ = client.cohort_update(params, batches, masks, sizes, 0.01)
+    p_m, _ = client.cohort_update(params, batches, masks, sizes, 0.01, cut=cut)
+    assert _max_err(p_d, p_m) < 1e-5
+
+
+def test_cohort_update_empty_masks_forward_only(world):
+    """cut = L (no member trains anything): the forward-only variant leaves
+    params untouched and still reports the same per-client losses."""
+    model, params, data = world
+    client = Client(model)
+    L = model.n_selectable
+    cohort = np.arange(3)
+    batches = data.cohort_batches(cohort, 4, 2)
+    sizes = data.sizes[cohort]
+    masks = np.zeros((3, L), np.float32)
+    p_d, l_d = client.cohort_update(params, batches, masks, sizes, 0.01)
+    p_m, l_m = client.cohort_update(params, batches, masks, sizes, 0.01, cut=L)
+    assert _max_err(params, p_m) == 0.0          # bit-identical pass-through
+    assert _max_err(p_d, p_m) == 0.0             # dense zero-mask = identity
+    np.testing.assert_allclose(l_m, l_d, atol=1e-5)
+
+
+def test_masked_matches_dense_ssm_family():
+    """The prefix split also covers non-attention scans (mamba2)."""
+    cfg = reduced(get_arch("mamba2_370m"), n_layers=3, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(1))
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=6, vocab_size=cfg.vocab_size, seq_len=8,
+        samples_per_client=8, skew="label", objective="lm"))
+    client = Client(model)
+    cohort = np.arange(3)
+    batches = data.cohort_batches(cohort, 2, 2)
+    sizes = data.sizes[cohort]
+    L = model.n_selectable
+    masks = np.zeros((3, L), np.float32)
+    masks[:, L - 1:] = 1.0
+    p_d, _ = client.cohort_update(params, batches, masks, sizes, 0.01)
+    p_m, _ = client.cohort_update(params, batches, masks, sizes, 0.01,
+                                  cut=L - 1)
+    assert _max_err(p_d, p_m) < 1e-5
+
+
+def test_masked_matches_dense_audio_family():
+    """Whisper: the cut can split the *encoder* stack (mask order = compute
+    order: enc_blocks before decoder blocks)."""
+    cfg = reduced(get_arch("whisper_medium"), n_layers=2, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(2))
+    L = model.n_selectable
+    B, tau, n = 2, 2, 3
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    batches = {
+        "frames": jax.random.normal(ks[0], (n, tau, B, cfg.enc_seq,
+                                            cfg.d_model)),
+        "tokens": jax.random.randint(ks[1], (n, tau, B, 8), 0,
+                                     cfg.vocab_size),
+    }
+    sizes = np.full(n, 8.0)
+    client = Client(model)
+    for cut in (1, cfg.n_enc_layers, L - 1):    # mid-encoder / boundary / deep
+        masks = np.zeros((n, L), np.float32)
+        masks[:, cut:] = 1.0
+        p_d, _ = client.cohort_update(params, batches, masks, sizes, 0.01)
+        p_m, _ = client.cohort_update(params, batches, masks, sizes, 0.01,
+                                      cut=cut)
+        assert _max_err(p_d, p_m) < 1e-5, f"cut={cut}"
+
+
+# ---------------------------------------------------------------------------
+# Slicing primitives
+# ---------------------------------------------------------------------------
+
+def test_first_trainable_layer_edges():
+    m = np.zeros((3, 5), np.float32)
+    assert M.first_trainable_layer(m) == 5
+    m[1, 3] = 1.0
+    assert M.first_trainable_layer(m) == 3
+    m[2, 0] = 1.0
+    assert M.first_trainable_layer(m) == 0
+
+
+def test_segment_cuts_and_trainable_slice_moe_dense0():
+    """deepseek's dense0 segment precedes blocks in mask order: a cut inside
+    blocks freezes all of dense0, a cut inside dense0 splits it."""
+    cfg = reduced(get_arch("deepseek_v2_lite_16b"), n_layers=3, d_model=32)
+    assert cfg.first_dense == 1
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    assert segment_cuts(0, cfg) == {"dense0": 0, "blocks": 0}
+    assert segment_cuts(1, cfg) == {"dense0": 1, "blocks": 0}
+    assert segment_cuts(2, cfg) == {"dense0": 1, "blocks": 1}
+    tr = trainable_slice(params, 1, cfg)
+    assert "dense0" not in tr                    # fully frozen → omitted
+    nb = cfg.n_layers - cfg.first_dense
+    assert all(x.shape[0] == nb for x in jax.tree.leaves(tr["blocks"]))
+
+
+def test_hybrid_family_has_no_prefix_cut():
+    cfg = reduced(get_arch("zamba2_7b"), n_layers=2, d_model=32)
+    assert not supports_prefix_cut(cfg)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    data = SyntheticFederatedData(FederatedTaskConfig(
+        n_clients=4, vocab_size=cfg.vocab_size, seq_len=8,
+        samples_per_client=8, skew="label", objective="lm"))
+    fl = FLConfig(n_clients=4, cohort_size=2, rounds=1, local_steps=1,
+                  batch_size=2, strategy="ours", budget=1, lam=1.0)
+    server = FLServer(model, fl, data)
+    assert server.mask_aware is False            # auto fallback to dense
+    assert server._cut_for(np.ones((2, model.n_selectable))) is None
+    with pytest.raises(ValueError, match="prefix-cut"):
+        FLServer(model, fl, data, mask_aware=True)
+
+
+def test_sequential_oracle_stays_dense(world):
+    model, _, data = world
+    fl = FLConfig(n_clients=12, cohort_size=3, rounds=1, local_steps=1,
+                  batch_size=4, strategy="ours", budget=1, lam=1.0)
+    seq = FLServer(model, fl, data, engine="sequential")
+    assert seq.mask_aware is False
+    with pytest.raises(ValueError, match="sequential"):
+        FLServer(model, fl, data, engine="sequential", mask_aware=True)
+
+
+# ---------------------------------------------------------------------------
+# Server-level: mask-aware default ≡ dense engine, at every pipeline depth
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [1, 3])
+def test_server_masked_matches_dense_engine(world, depth):
+    model, params, _ = world
+    task = FederatedTaskConfig(
+        n_clients=12, n_classes=10, vocab_size=model.cfg.vocab_size,
+        seq_len=8, samples_per_client=16, skew="label",
+        objective="classification")
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=3, local_steps=2,
+                  lr=0.01, batch_size=4, strategy="ours", budget=1, lam=1.0,
+                  seed=23)
+    s_m = FLServer(model, fl, SyntheticFederatedData(task),
+                   pipeline_depth=depth)
+    s_d = FLServer(model, fl, SyntheticFederatedData(task),
+                   pipeline_depth=depth, mask_aware=False)
+    assert s_m.mask_aware and not s_d.mask_aware
+    p_m, h_m = s_m.run(params)
+    p_d, h_d = s_d.run(params)
+    for rm, rd in zip(h_m.records, h_d.records):
+        np.testing.assert_array_equal(rm.cohort, rd.cohort)
+        np.testing.assert_array_equal(rm.mask_matrix, rd.mask_matrix)
+        assert rm.train_loss == pytest.approx(rd.train_loss, abs=1e-5)
+        assert rm.test_loss == pytest.approx(rd.test_loss, abs=1e-5)
+    assert _max_err(p_m, p_d) < 1e-5
+
+
+def test_server_empty_budget_round_runs_masked(world):
+    """Layer costs no budget affords: every mask is empty (cut = L), the
+    forward-only program variant runs, params stay put — same as the dense
+    engine's zero-masked round."""
+    model, params, _ = world
+    task = FederatedTaskConfig(
+        n_clients=12, n_classes=10, vocab_size=model.cfg.vocab_size,
+        seq_len=8, samples_per_client=16, skew="label",
+        objective="classification")
+    fl = FLConfig(n_clients=12, cohort_size=3, rounds=1, local_steps=1,
+                  lr=0.01, batch_size=4, strategy="ours", budget=1, lam=1.0,
+                  seed=5)
+    outs = {}
+    for aware in (True, False):
+        server = FLServer(model, fl, SyntheticFederatedData(task),
+                          mask_aware=aware)
+        server.layer_costs = np.full(server.L, 10.0)   # nothing fits R=1
+        outs[aware] = server.run(params)
+    p_m, h_m = outs[True]
+    p_d, h_d = outs[False]
+    assert h_m.records[0].union_frac == 0.0
+    np.testing.assert_array_equal(h_m.records[0].mask_matrix,
+                                  h_d.records[0].mask_matrix)
+    assert _max_err(p_m, params) == 0.0          # untouched
+    assert _max_err(p_m, p_d) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: single-forward eval
+# ---------------------------------------------------------------------------
+
+def test_eval_single_forward_unchanged(world):
+    """Eval computes loss and accuracy from ONE forward; the values must
+    equal the old double-forward composition (model.loss + a second
+    forward_seq for the logits) exactly."""
+    model, params, data = world
+    client = Client(model)
+    batch = data.test_batch()
+    loss, acc = client.evaluate(params, batch)
+
+    @jax.jit
+    def old_eval(params, batch):                 # the pre-fix composition
+        loss = model.loss(params, batch)
+        h, _, _ = model.forward_seq(params, batch)
+        logits = model._head(params, jnp.mean(h, axis=1)[:, None])[:, 0]
+        acc = jnp.mean((jnp.argmax(logits, -1)
+                        == batch["label"]).astype(jnp.float32))
+        return loss, acc
+
+    want_loss, want_acc = old_eval(params, batch)
+    assert loss == pytest.approx(float(want_loss), abs=1e-6)
+    assert acc == pytest.approx(float(want_acc), abs=1e-6)
+    # and the new program actually dropped the second forward: the traced
+    # jaxpr carries fewer equations than the old double-forward composition
+    new_eqns = len(jax.make_jaxpr(client._eval_impl)(params, batch).eqns)
+    old_eqns = len(jax.make_jaxpr(
+        lambda p, b: old_eval.__wrapped__(p, b))(params, batch).eqns)
+    assert new_eqns < old_eqns
+
+
+# ---------------------------------------------------------------------------
+# Satellite: partial warm starts for cohorts with unseen members
+# ---------------------------------------------------------------------------
+
+def test_partial_warm_start_fills_unseen_rows(world):
+    model, params, _ = world
+    task = FederatedTaskConfig(
+        n_clients=12, n_classes=10, vocab_size=model.cfg.vocab_size,
+        seq_len=8, samples_per_client=16, skew="label",
+        objective="classification")
+    fl = FLConfig(n_clients=12, cohort_size=3, rounds=1, local_steps=1,
+                  batch_size=4, strategy="ours", budget=2, lam=1.0, seed=0)
+    server = FLServer(model, fl, SyntheticFederatedData(task))
+    rng = np.random.RandomState(0)
+
+    # round 0: cohort {1, 4, 7} — populates the warm-mask cache
+    plan0 = server._plan_for(np.array([1, 4, 7]), t=0)
+    stats0 = {"grad_sq_norms":
+              np.abs(rng.randn(3, server.L)).astype(np.float32)}
+    server.select_round(plan0, stats0)
+    assert server.select_stats["partial_warm_starts"] == 0
+
+    # cohort {1, 4, 9}: 9 is unseen — known rows keep their warm masks,
+    # the unseen row gets the solver's greedy cold-start fill
+    cohort = np.array([1, 4, 9])
+    G = np.abs(rng.randn(3, server.L)).astype(np.float32)
+    probe = ProbeReport(grad_sq_norms=G)
+    budgets = server._budgets(cohort)
+    init = server._warm_init(cohort, probe, budgets)
+    assert init is not None and init.shape == (3, server.L)
+    assert server.select_stats["partial_warm_starts"] == 1
+    np.testing.assert_array_equal(init[0], server._warm_masks[1])
+    np.testing.assert_array_equal(init[1], server._warm_masks[4])
+    np.testing.assert_array_equal(
+        init[2], greedy_rows(G, budgets, costs=server.layer_costs)[2])
+
+    # the full select path counts it too and stays budget-exact
+    plan1 = server._plan_for(cohort, t=1)
+    masks = server.select_round(plan1, {"grad_sq_norms": G})
+    assert server.select_stats["partial_warm_starts"] == 2
+    assert np.all(masks.sum(1) <= 2)
+    assert set(server._warm_masks) == {1, 4, 7, 9}
+
+
+def test_partial_warm_start_runs_deterministic(world):
+    """Two identical runs with rotating cohorts (so unseen members appear
+    mid-run) stay bit-identical — the greedy fill is a pure function of the
+    round's utilities."""
+    model, params, _ = world
+    task = FederatedTaskConfig(
+        n_clients=12, n_classes=10, vocab_size=model.cfg.vocab_size,
+        seq_len=8, samples_per_client=16, skew="label",
+        objective="classification")
+    fl = FLConfig(n_clients=12, cohort_size=4, rounds=4, local_steps=1,
+                  lr=0.01, batch_size=4, strategy="ours", budget=2, lam=1.0,
+                  seed=29)
+    hists = []
+    for _ in range(2):
+        server = FLServer(model, fl, SyntheticFederatedData(task))
+        _, h = server.run(params)
+        hists.append(h)
+        # rotating cohorts must actually have triggered a partial fill
+        assert server.select_stats["partial_warm_starts"] >= 1
+    for r1, r2 in zip(hists[0].records, hists[1].records):
+        np.testing.assert_array_equal(r1.cohort, r2.cohort)
+        np.testing.assert_array_equal(r1.mask_matrix, r2.mask_matrix)
