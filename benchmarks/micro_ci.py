@@ -1,5 +1,5 @@
 """CI micro-benchmark gate: round_engine + masked_backward + full_round +
-probe_trim + pipeline_depth.
+probe_trim + pipeline_depth + population_state.
 
     PYTHONPATH=src python -m benchmarks.micro_ci
 
@@ -7,8 +7,9 @@ Runs the engine micro-benchmarks, records them to
 ``experiments/bench/BENCH_round_engine.json``,
 ``experiments/bench/BENCH_masked_backward.json``,
 ``experiments/bench/BENCH_full_round.json``,
-``experiments/bench/BENCH_probe_trim.json`` and
-``experiments/bench/BENCH_pipeline_depth.json`` (uploaded as CI
+``experiments/bench/BENCH_probe_trim.json``,
+``experiments/bench/BENCH_pipeline_depth.json`` and
+``experiments/bench/BENCH_population_state.json`` (uploaded as CI
 artifacts), and enforces the wall-clock budgets: the vectorized engine
 step must not be slower than the sequential oracle at any cohort size, the
 mask-aware engine must not be slower than the dense program at any
@@ -17,8 +18,10 @@ partial-layer efficiency claim, DESIGN.md §7), the streaming pipeline's
 full round (sampling included) must not be slower than the pre-pipeline
 legacy path (no dispatch regression from the pluggable-API probe path),
 the requirements-trimmed probes must not be slower than the all-stats
-probe, and the depth-k lookahead scheduler must not be slower than the
-depth-1 double buffer (paired per-rep ratios).  Exits non-zero on a
+probe, the depth-k lookahead scheduler must not be slower than the
+depth-1 double buffer (paired per-rep ratios), and the population-state
+store's per-round host cost must stay flat when the population grows
+10x (O(cohort) gather/scatter, DESIGN.md §8).  Exits non-zero on a
 budget violation.
 """
 from __future__ import annotations
@@ -35,6 +38,7 @@ def main() -> None:
     from benchmarks.run import (full_round_benchmarks,
                                 masked_backward_benchmarks,
                                 pipeline_depth_benchmarks,
+                                population_state_benchmarks,
                                 probe_trim_benchmarks,
                                 round_engine_benchmarks)
 
@@ -49,6 +53,8 @@ def main() -> None:
     save_result("BENCH_probe_trim", probe)
     pdepth = pipeline_depth_benchmarks()
     save_result("BENCH_pipeline_depth", pdepth)
+    popstate = population_state_benchmarks()
+    save_result("BENCH_population_state", popstate)
 
     failures = []
     by_cohort: dict = {}
@@ -103,6 +109,16 @@ def main() -> None:
         failures.append(
             f"pipeline_depth: depth-{pdepth['depth']} paired ratio "
             f"{pdepth['paired_ratio']:.2f} > 1.10 vs depth-1")
+    # every store op is an O(cohort) fancy-index into flat arrays: growing
+    # the population 10x must leave the per-round host cost flat (2.0 is
+    # generous headroom for allocator/cache noise at the 10^5 row arrays —
+    # a dict- or O(n)-scan regression shows up as ~10x)
+    pops = popstate["populations"]
+    if popstate["paired_ratio"] > 2.0:
+        failures.append(
+            f"population_state: {pops[-1]}-client paired ratio "
+            f"{popstate['paired_ratio']:.2f} > 2.0 vs {pops[0]} clients "
+            f"(per-round host cost must be independent of population size)")
 
     print(f"full_round speedup over pre-pipeline path: "
           f"{full['speedup']:.2f}x")
@@ -113,6 +129,8 @@ def main() -> None:
           f"{probe['ours_trimmed_ratio']:.2f} vs all-stats probe")
     print(f"pipeline depth-{pdepth['depth']}: paired ratio "
           f"{pdepth['paired_ratio']:.2f} vs depth-1")
+    print(f"population_state {pops[-1]} vs {pops[0]} clients: paired ratio "
+          f"{popstate['paired_ratio']:.2f}")
     if failures:
         for f in failures:
             print(f"BUDGET VIOLATION: {f}", file=sys.stderr)
@@ -120,7 +138,7 @@ def main() -> None:
     print("micro-benchmark budget: OK "
           "(vectorized <= sequential, masked <= dense at every cut and "
           ">=1.5x at the deepest, trimmed probe <= all-stats, "
-          "depth-k <= depth-1)")
+          "depth-k <= depth-1, population-state cost flat in n)")
 
 
 if __name__ == "__main__":

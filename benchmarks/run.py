@@ -92,6 +92,8 @@ def micro_benchmarks():
     probe_trim_benchmarks()
     # depth-k lookahead scheduler vs the classic depth-1 double buffer
     pipeline_depth_benchmarks()
+    # population-state store: per-round host cost flat in population size
+    population_state_benchmarks()
 
 
 def round_engine_benchmarks() -> list[dict]:
@@ -425,6 +427,79 @@ def full_round_benchmarks(cohort_n: int = 8, rounds: int = 4) -> dict:
               + ("-" if mode == "legacy" else
                  f"{out['legacy_us_per_round'] / us:.2f}x_vs_legacy"))
     out["speedup"] = out["legacy_us_per_round"] / out["vectorized_us_per_round"]
+    return out
+
+
+def population_state_benchmarks(cohort_n: int = 8,
+                                populations: tuple = (10_000, 100_000),
+                                n_layers: int = 24) -> dict:
+    """Host µs per round of ClientStateStore/ClientStreamState traffic.
+
+    Times one round's worth of population-state ops — warm-mask gather +
+    scatter, stats validity check + scatter + gather, per-client stream
+    draw + advance, and a periodic O(1) generation clear — against stores
+    sized at 10⁴ and 10⁵ clients with the same cohort.  Every op is an
+    O(cohort) fancy-index into flat arrays, so the per-round cost must be
+    independent of the population size: ``micro_ci`` gates the median of
+    *paired* per-rep ratios (each rep times both populations back to back,
+    so load spikes hit both sides and cancel) flat at ≤ 2.0.  Returns a
+    dict suitable for BENCH_population_state.json.
+    """
+    from repro.core.state import ClientStateStore, ClientStreamState
+
+    reps = 3 if FAST else 7
+    rounds = 20 if FAST else 100
+    rng = np.random.RandomState(0)
+    stat_keys = ("grad_sq_norms", "param_sq_norms", "scores")
+
+    def one_round(store, streams, cohort, t):
+        # plan: which cohort members need a fresh probe?
+        probe_ids = store.missing_stats(cohort)
+        if len(probe_ids):
+            store.set_stat_rows(probe_ids, {
+                k: np.ones((len(probe_ids), n_layers), np.float32)
+                for k in stat_keys})
+        stats = store.stat_rows(cohort)
+        # warm-start gather, (P1)-solve stand-in, scatter back
+        rows, valid = store.warm_rows(cohort)
+        rows[~valid] = 1.0
+        store.set_warm_rows(cohort, rows, t=t)
+        # per-client data streams
+        for i in cohort:
+            streams.rng(int(i)).randint(0, 1 << 16, 4)
+            streams.advance(int(i), 4)
+        if t % 10 == 9:                      # selection refresh: O(1) bump
+            store.clear_stats()
+        return stats
+
+    def fresh(n):
+        store = ClientStateStore(n, n_layers)
+        streams = ClientStreamState(n, lambda i: 7 * i + 1)
+        cohorts = rng.randint(0, n, size=(rounds, cohort_n))
+        return store, streams, cohorts
+
+    for n in populations:                    # warmup: allocator + caches
+        store, streams, cohorts = fresh(n)
+        for t in range(5):
+            one_round(store, streams, cohorts[t], t)
+    times: dict = {n: [] for n in populations}
+    for _ in range(reps):
+        for n in populations:                # interleave: paired reps
+            store, streams, cohorts = fresh(n)
+            t0 = time.perf_counter()
+            for t in range(rounds):
+                one_round(store, streams, cohorts[t], t)
+            times[n].append((time.perf_counter() - t0) / rounds)
+    lo, hi = populations[0], populations[-1]
+    t_lo, t_hi = np.asarray(times[lo]), np.asarray(times[hi])
+    ratio = float(np.median(t_hi / t_lo))
+    out = {"cohort": cohort_n, "rounds_timed": rounds, "reps": reps,
+           "populations": list(populations), "paired_ratio": ratio}
+    for n in populations:
+        us = float(np.min(np.asarray(times[n])) * 1e6)
+        out[f"pop{n}_us_per_round"] = us
+        print(f"population_state_n{n}_c{cohort_n},{us:.1f},"
+              + ("-" if n == lo else f"{ratio:.2f}x_vs_n{lo}"))
     return out
 
 

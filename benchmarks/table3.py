@@ -56,6 +56,15 @@ def run() -> dict:
             "tx_ratio": rep.ratio_transmit,
         }
 
+    # unit crosscheck: uniform and exact must agree in *bits* on uniform
+    # layer sizes (the uniform model has one abstract param per layer)
+    uni = backward_cost_uniform(L, 1, tau)
+    uni_exact = backward_cost_exact(np.ones(L, np.int64), mask, tau)
+    assert uni.transmit_bits == uni_exact.transmit_bits, \
+        (uni.transmit_bits, uni_exact.transmit_bits)
+    assert uni.ratio_transmit == uni_exact.ratio_transmit
+    rows["uniform_bits_crosscheck"] = uni.transmit_bits
+
     # cross-check the transmission ratio against the simulator's counter
     # (the bench scenario model has L=4 selectable layers, so R=1 -> 1/4)
     h_sel = run_fl(SCENARIOS["cifar"], "top", budget=1, rounds=2)

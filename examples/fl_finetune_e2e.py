@@ -4,6 +4,13 @@ Default is a ~15M-parameter llama-family model trained for 200 rounds on
 CPU (a few minutes); scale up with --layers/--d-model/--rounds (the model
 definition is the same one the 1.1B config uses).
 
+Checkpointing is full-state via ``Experiment(checkpoint_dir=...)``: every
+--ckpt-every rounds the server saves params, the population-state store
+(warm masks, probe-stat cache, stream positions), and the rng states, and
+a re-run of this script auto-resumes from the latest checkpoint —
+bit-identical on cohorts/masks to a run that never stopped (pretraining
+is skipped because the checkpoint already carries post-pretrain params).
+
     PYTHONPATH=src python examples/fl_finetune_e2e.py \
         --arch tinyllama-1.1b --layers 8 --d-model 256 --rounds 200 \
         --strategy ours --budget 2 --ckpt /tmp/fl_ckpt
@@ -18,9 +25,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 from repro.api import Experiment
-from repro.ckpt import latest_step, restore_checkpoint, save_checkpoint
+from repro.ckpt import latest_step
 from repro.configs.base import RuntimeConfig, get_arch, reduced
-from repro.data.pretrain import pretrain
 from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
 from repro.models.model import Model, count_params
 
@@ -55,39 +61,25 @@ def main():
         skew="feature", objective="classification", signal=0.8,
         domain_strength=0.4))
 
-    params = model.init(jax.random.PRNGKey(0))
-    if latest_step(args.ckpt) is not None:
-        params, manifest = restore_checkpoint(args.ckpt, params)
-        start = manifest["extra"].get("round", 0)
-        print(f"resumed from {args.ckpt} at round {start}")
-    else:
-        print(f"pretraining foundation stand-in ({args.pretrain_steps} steps)…")
-        params = pretrain(model, params, data, steps=args.pretrain_steps,
-                          lr=3e-3, verbose=True)
-        start = 0
-
     # the Experiment front door resolves the strategy from the registry
-    # (unknown names fail fast with a did-you-mean) and builds the engine;
-    # the explicit run_round loop below owns checkpointing
+    # (unknown names fail fast with a did-you-mean), builds the engine, and
+    # owns checkpoint/resume: run() restores the latest checkpoint under
+    # --ckpt (params + client-state store + rng streams + History) and
+    # pretrains the foundation stand-in only on a cold start
+    step = latest_step(args.ckpt)
+    if step is not None:
+        print(f"resuming from {args.ckpt} at round {step}")
+    else:
+        print(f"cold start: pretraining foundation stand-in "
+              f"({args.pretrain_steps} steps)…")
     exp = Experiment(model, data, args.strategy,
                      cohort_size=args.cohort, rounds=args.rounds,
                      local_steps=args.local_steps, lr=args.lr,
-                     batch_size=16, budget=args.budget, lam=args.lam)
-    server = exp.build()
-
-    from repro.core.server import History
-    hist = History()
-    for t in range(start, args.rounds):
-        params, rec = server.run_round(params, t)
-        hist.records.append(rec)
-        if t % 10 == 0 or t == args.rounds - 1:
-            print(f"[{t:4d}] loss={rec.test_loss:.4f} acc={rec.test_acc:.4f} "
-                  f"union={rec.union_frac:.2f} upload={rec.uploaded_params:,}")
-        if (t + 1) % args.ckpt_every == 0:
-            path = save_checkpoint(args.ckpt, t + 1, params,
-                                   extra={"round": t + 1,
-                                          "acc": rec.test_acc})
-            print(f"  checkpoint -> {path}")
+                     batch_size=16, budget=args.budget, lam=args.lam,
+                     checkpoint_dir=args.ckpt,
+                     checkpoint_every=args.ckpt_every,
+                     pretrain_steps=args.pretrain_steps)
+    params, hist = exp.run(verbose=True)
 
     print("\nfinal:", hist.summary())
 

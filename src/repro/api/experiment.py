@@ -48,6 +48,8 @@ class Experiment:
                  pipeline: Optional[bool] = None,
                  pipeline_depth: int = 1,
                  mask_aware: Optional[bool] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 10,
                  pretrain_steps: int = 0, pretrain_lr: float = 3e-3,
                  seed: Optional[int] = None,
                  **fl_overrides):
@@ -75,6 +77,11 @@ class Experiment:
         # None = auto: the mask-aware (frozen-prefix-skipping) update
         # program wherever the family supports it (DESIGN.md §7)
         self.mask_aware = mask_aware
+        # round-boundary checkpoint/resume (None = off): run() saves every
+        # checkpoint_every rounds + at the end, and auto-resumes from the
+        # latest checkpoint under checkpoint_dir
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
         self.pretrain_steps = pretrain_steps
         self.pretrain_lr = pretrain_lr
         self._server: Optional[FLServer] = None
@@ -88,7 +95,9 @@ class Experiment:
                                     pipeline=self.pipeline,
                                     pipeline_depth=self.pipeline_depth,
                                     strategy=self.strategy,
-                                    mask_aware=self.mask_aware)
+                                    mask_aware=self.mask_aware,
+                                    checkpoint_dir=self.checkpoint_dir,
+                                    checkpoint_every=self.checkpoint_every)
         return self._server
 
     @property
@@ -107,8 +116,25 @@ class Experiment:
 
     def run(self, params: Optional[PyTree] = None,
             rounds: Optional[int] = None,
-            verbose: bool = False) -> tuple[PyTree, History]:
-        """Run Algorithm 1 for ``rounds`` (default ``fl.rounds``)."""
+            verbose: bool = False, resume: bool = True
+            ) -> tuple[PyTree, History]:
+        """Run Algorithm 1 for ``rounds`` (default ``fl.rounds``).
+
+        With ``checkpoint_dir`` set, state is saved at round boundaries and
+        — unless ``resume=False`` — the latest checkpoint under that dir is
+        restored first: params, client-state store, rng streams, and
+        History, so the continued run is bit-identical on masks to one that
+        never stopped.  A checkpoint at or past ``rounds`` returns
+        immediately with the restored result."""
+        server = self.build()
+        start, history = 0, None
+        if resume and self.checkpoint_dir is not None:
+            restored = server.restore_state(
+                params if params is not None
+                else self.model.init(jax.random.PRNGKey(self.fl.seed)))
+            if restored is not None:
+                params, start, history = restored
         if params is None:
             params = self.init_params()
-        return self.build().run(params, rounds=rounds, verbose=verbose)
+        return server.run(params, rounds=rounds, verbose=verbose,
+                          start=start, history=history)

@@ -26,6 +26,13 @@ Optional extras some drivers use: ``client_batch(i, batch_size)`` and
 ``pretrain_batch(batch_size)`` (the foundation-model stand-in,
 ``data/pretrain.py``), and ``alpha`` (population data ratios).
 
+Optional checkpoint hooks (consumed by ``FLServer.save_state`` /
+``restore_state``): ``state_dict() -> {name: np.ndarray}`` and
+``load_state_dict(d)`` — the task's resumable stream state as flat arrays
+("/"-namespaced keys).  Tasks without them simply aren't checkpointed
+(resume then replays their streams from construction, which is only exact
+for stateless tasks).
+
 ``SyntheticFederatedData`` implements the protocol as-is;
 :class:`DirichletTokenMixtureTask` below is a second, independent
 implementation proving the seam — a Dirichlet-partitioned topic-mixture
@@ -37,6 +44,9 @@ from dataclasses import dataclass
 from typing import Optional, Protocol, runtime_checkable
 
 import numpy as np
+
+from repro.core.state import (ClientStreamState, rng_state_from_arrays,
+                              rng_state_to_arrays, sub_state)
 
 
 @runtime_checkable
@@ -105,11 +115,37 @@ class DirichletTokenMixtureTask:
         self.sizes = np.maximum(
             (cfg.samples_per_client *
              np.exp(rng.randn(cfg.n_clients) * 0.3)).astype(int), 8)
-        self._rngs = [np.random.RandomState(cfg.seed * 977 + 13 * i + 5)
-                      for i in range(cfg.n_clients)]
+        # lazy per-client streams (flat positions + on-first-touch rngs):
+        # same per-(seed, i) stream seeds as the old eager list, O(touched)
+        # memory at population scale, checkpointable via state_dict
+        self._streams = ClientStreamState(
+            cfg.n_clients, lambda i, s=cfg.seed: s * 977 + 13 * i + 5)
         self._heldout_rng = np.random.RandomState(cfg.seed + 131071)
         self._pretrain_rng = np.random.RandomState(cfg.seed + 524287)
         self._test_set: Optional[dict] = None
+
+    @property
+    def _rngs(self) -> ClientStreamState:
+        """Back-compat: ``task._rngs[i]`` still yields client i's stream."""
+        return self._streams
+
+    def stream_positions(self) -> np.ndarray:
+        """(n_clients,) samples drawn per client stream so far."""
+        return self._streams.positions.copy()
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Flat-array resumable state (see the Task protocol docstring).
+        The held-out rng is not saved: the fixed test set is its first and
+        only consumer, so a fresh task redraws it identically."""
+        d = {f"streams/{k}": v for k, v in self._streams.state_dict().items()}
+        d.update({f"pretrain_rng/{k}": v for k, v in
+                  rng_state_to_arrays(self._pretrain_rng).items()})
+        return d
+
+    def load_state_dict(self, d: dict[str, np.ndarray]) -> None:
+        self._streams.load_state_dict(sub_state(d, "streams/"))
+        rng_state_from_arrays(sub_state(d, "pretrain_rng/"),
+                              self._pretrain_rng)
 
     # ------------------------------------------------------------------
     @property
@@ -141,10 +177,14 @@ class DirichletTokenMixtureTask:
         return batch
 
     def client_batch(self, i: int, batch_size: int) -> dict:
-        return self._draw(self._rngs[i], self._client_cdf[i], batch_size)
+        self._streams.advance(i, batch_size)
+        return self._draw(self._streams.rng(i), self._client_cdf[i],
+                          batch_size)
 
     def client_batches(self, i: int, batch_size: int, n: int) -> dict:
-        flat = self._draw(self._rngs[i], self._client_cdf[i], n * batch_size)
+        self._streams.advance(i, n * batch_size)
+        flat = self._draw(self._streams.rng(i), self._client_cdf[i],
+                          n * batch_size)
         return {k: v.reshape((n, batch_size) + v.shape[1:])
                 for k, v in flat.items()}
 

@@ -1,2 +1,4 @@
-from repro.ckpt.checkpoint import (latest_step, restore_checkpoint,  # noqa: F401
-                                   save_checkpoint)
+from repro.ckpt.checkpoint import (latest_step,  # noqa: F401
+                                   load_checkpoint_arrays,
+                                   restore_checkpoint, save_checkpoint,
+                                   sweep_tmp_dirs)

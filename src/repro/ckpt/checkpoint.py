@@ -5,9 +5,13 @@ Format: one ``step_<n>/`` directory per checkpoint containing
 * ``arrays.npz``  — flattened leaves keyed by escaped tree paths
 * ``manifest.json`` — tree structure, dtypes, FL round metadata
 
-Atomic via write-to-tmp + rename.  Supports partial restore (e.g. restoring
-only the selected-layer substack on resource-constrained clients — the
-paper's clients never hold optimizer state for frozen layers).
+Atomic via write-to-tmp + rename; orphaned ``tmp*`` dirs from interrupted
+saves are swept on the next save.  Supports partial restore
+(``partial=True``: template keys absent from the archive keep the template
+leaf — e.g. restoring only the selected-layer substack on
+resource-constrained clients, which never hold optimizer state for frozen
+layers).  The returned manifest reports ``restored`` / ``skipped`` key
+lists either way.
 """
 from __future__ import annotations
 
@@ -40,9 +44,23 @@ def _path_str(entry) -> str:
     return str(entry)
 
 
+def sweep_tmp_dirs(directory: str) -> list[str]:
+    """Remove orphaned ``tmp*`` dirs left behind by interrupted saves."""
+    swept = []
+    if not os.path.isdir(directory):
+        return swept
+    for d in os.listdir(directory):
+        path = os.path.join(directory, d)
+        if d.startswith("tmp") and os.path.isdir(path):
+            shutil.rmtree(path, ignore_errors=True)
+            swept.append(path)
+    return swept
+
+
 def save_checkpoint(directory: str, step: int, params: PyTree,
                     extra: Optional[dict] = None) -> str:
     os.makedirs(directory, exist_ok=True)
+    sweep_tmp_dirs(directory)
     target = os.path.join(directory, f"step_{step:08d}")
     flat = _flatten(params)
     manifest = {
@@ -70,14 +88,20 @@ def save_checkpoint(directory: str, step: int, params: PyTree,
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_")]
+    steps = []
+    for d in os.listdir(directory):
+        if not d.startswith("step_"):
+            continue
+        try:
+            steps.append(int(d.split("_")[1]))
+        except (IndexError, ValueError):
+            continue            # stray non-checkpoint entry, not ours to judge
     return max(steps) if steps else None
 
 
-def restore_checkpoint(directory: str, template: PyTree,
-                       step: Optional[int] = None) -> tuple[PyTree, dict]:
-    """Restore into the structure of ``template`` (shapes must match)."""
+def load_checkpoint_arrays(directory: str, step: Optional[int] = None
+                           ) -> tuple[dict[str, np.ndarray], dict]:
+    """The raw flat ``{path: array}`` archive + manifest, no template."""
     step = step if step is not None else latest_step(directory)
     assert step is not None, f"no checkpoints under {directory}"
     target = os.path.join(directory, f"step_{step:08d}")
@@ -85,13 +109,38 @@ def restore_checkpoint(directory: str, template: PyTree,
         manifest = json.load(f)
     with np.load(os.path.join(target, "arrays.npz")) as z:
         flat = {k.replace("|", "/"): z[k] for k in z.files}
+    return flat, manifest
+
+
+def restore_checkpoint(directory: str, template: PyTree,
+                       step: Optional[int] = None, *,
+                       partial: bool = False) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``template`` (shapes must match).
+
+    With ``partial=True``, template keys absent from the archive keep the
+    template leaf instead of raising.  The manifest gains ``restored`` and
+    ``skipped`` lists of tree paths.
+    """
+    flat, manifest = load_checkpoint_arrays(directory, step)
 
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
-    new_leaves = []
+    new_leaves, restored, skipped = [], [], []
     for path, leaf in leaves_with_path:
         key = _SEP.join(_path_str(p) for p in path)
+        if key not in flat:
+            if not partial:
+                raise KeyError(
+                    f"{key!r} missing from checkpoint "
+                    f"{directory} step {manifest['step']} "
+                    f"(pass partial=True to keep the template leaf)")
+            skipped.append(key)
+            new_leaves.append(leaf)
+            continue
         arr = flat[key]
         assert tuple(arr.shape) == tuple(leaf.shape), \
             f"{key}: ckpt {arr.shape} vs template {leaf.shape}"
+        restored.append(key)
         new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    manifest["restored"] = restored
+    manifest["skipped"] = skipped
     return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest

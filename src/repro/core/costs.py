@@ -26,12 +26,16 @@ class CostReport:
 
 def backward_cost_uniform(L: int, R: int, tau: int, b: float = 1.0,
                           *, sel_period: int = 1, sel_batches: int = 1,
-                          local_batches: int = 1) -> CostReport:
+                          local_batches: int = 1,
+                          bits_per_param: int = 32) -> CostReport:
     """Eq. (16)/(17) with the §4.3 extensions (Sel. Period / Sel. Batch).
 
     ``b`` = backward FLOPs per layer per batch.  The probe uses
     ``sel_batches`` batches every ``sel_period`` rounds; fine-tuning uses
-    ``local_batches`` per step.
+    ``local_batches`` per step.  Layers are uniform with one abstract
+    parameter each, so upload = R selected layers × ``bits_per_param``
+    — actual bits, same unit as ``backward_cost_exact``; the dimensionless
+    R/L lives in ``ratio_transmit``.
     """
     select = b * (L - 1) * (sel_batches / local_batches) / sel_period
     finetune = b * R * tau
@@ -39,7 +43,7 @@ def backward_cost_uniform(L: int, R: int, tau: int, b: float = 1.0,
     return CostReport(
         compute_flops=select + finetune,
         select_flops=select,
-        transmit_bits=R / L,
+        transmit_bits=(R / L) * bits_per_param * L,
         ratio_compute=(select + finetune) / full,
         ratio_transmit=R / L,
     )

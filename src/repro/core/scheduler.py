@@ -48,7 +48,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any
+from typing import Any, Optional
 
 from repro.core.server import (FLServer, History, RoundRecord, SampledRound)
 
@@ -72,13 +72,31 @@ class RoundScheduler:
         self._queue: deque[SampledRound] = deque()   # rounds, t ascending
         self._next_plan = 0          # next round index to plan (rng order)
         self._selected_through = -1  # highest t whose select completed
+        self._barrier = -1           # next unsaved checkpoint boundary
 
     # -- host prefetch ----------------------------------------------------
+    def _next_barrier(self, after: int, T: int) -> int:
+        """The first checkpoint boundary past ``after`` (T+1 = none left).
+        Planning round b consumes the server rng and client data streams,
+        so rounds at/after an unsaved boundary must not be planned — a
+        checkpoint written at b would otherwise capture post-b draws and
+        break bit-exact resume."""
+        srv = self.server
+        if srv.checkpoint_dir is None:
+            return T + 1
+        b = after + 1
+        while b <= T and not srv._is_ckpt_round(b, T):
+            b += 1
+        return b if b <= T else T + 1
+
     def _can_plan(self, t: int) -> bool:
         """May ``plan_round(t)`` fire now?  Plans always fire in t order
         (queue discipline); additionally a non-refresh plan's probe_ids
-        read the stats cache as left by select(t-1)."""
+        read the stats cache as left by select(t-1), and no plan may cross
+        an unsaved checkpoint boundary (:meth:`_next_barrier`)."""
         srv = self.server
+        if t >= self._barrier:
+            return False
         if not srv.needs_probe or t % srv.fl.selection_period == 0:
             return True
         return self._selected_through >= t - 1
@@ -101,8 +119,8 @@ class RoundScheduler:
         return srv.select_round(plan, srv._stats_np(stats_dev))
 
     # -- the round loop ---------------------------------------------------
-    def run(self, params: PyTree, T: int,
-            verbose: bool) -> tuple[PyTree, History]:
+    def run(self, params: PyTree, T: int, verbose: bool, start: int = 0,
+            history: Optional[History] = None) -> tuple[PyTree, History]:
         srv = self.server
         fl, client = srv.fl, srv.client
         reqs, score_fn = srv._probe_reqs, srv._score_fn
@@ -110,16 +128,22 @@ class RoundScheduler:
         srv._ensure_layer_params(params)
         test = srv.data.test_batch()
 
+        self._next_plan = start
+        self._selected_through = start - 1
+        self._barrier = self._next_barrier(start, T)
+        prefix = list(history.records) if history is not None else []
+
         self._prefetch(T, self.depth)
-        sampled = self._queue.popleft()              # round 0
+        sampled = self._queue.popleft()              # round `start`
         stats_dev = (client.probe_cohort_raw(params, sampled.probe_batches,
                                              reqs, score_fn)
                      if sampled.probe_batches is not None else None)
         pending: list = []       # raw entries; finalized lazily (verbose)
+        printed = 0              # pending entries already printed (in order)
         pool = ThreadPoolExecutor(max_workers=1,
                                   thread_name_prefix="p1-solver")
         try:
-            for t in range(T):
+            for t in range(start, T):
                 t0 = time.time()
                 plan = sampled.plan
                 # the host solve (stats sync + (P1)) overlaps the in-flight
@@ -158,21 +182,45 @@ class RoundScheduler:
                 loss_dev, acc_dev = client.evaluate_raw(params, test)
                 pending.append((plan, masks, losses, loss_dev, acc_dev,
                                 time.time() - t0))
-                if verbose and t >= 1:
-                    # print the *previous* round: its program has retired,
-                    # so materialising it cannot stall the round just
-                    # dispatched (printing used to sync every round)
-                    pending[t - 1] = srv._finalize(pending[t - 1])
-                    srv._print_round(pending[t - 1])
-                if self._queue:
+                if verbose:
+                    # print up to the *previous* round: its program has
+                    # retired, so materialising it cannot stall the round
+                    # just dispatched (printing used to sync every round)
+                    while printed < len(pending) - 1:
+                        if not isinstance(pending[printed], RoundRecord):
+                            pending[printed] = srv._finalize(pending[printed])
+                        srv._print_round(pending[printed])
+                        printed += 1
+                if t + 1 == self._barrier:
+                    # checkpoint boundary: the prefetch gate drained the
+                    # queue here (no round past the boundary was planned),
+                    # so syncing params + pending records captures exactly
+                    # the synchronous loop's state after round t
+                    for i in range(len(pending)):
+                        if not isinstance(pending[i], RoundRecord):
+                            pending[i] = srv._finalize(pending[i])
+                    srv.save_state(params, t + 1,
+                                   History(records=prefix + pending))
+                    self._barrier = self._next_barrier(t + 1, T)
+                    self._prefetch(T, self.depth)
+                    if self._queue:
+                        # restart the stream: the boundary round's probe
+                        # runs standalone on the just-saved params (same
+                        # math as the fused/chained dispatch — pinned by
+                        # the engine-parity tests)
+                        sampled = self._queue.popleft()
+                        stats_dev = (client.probe_cohort_raw(
+                            params, sampled.probe_batches, reqs, score_fn)
+                            if sampled.probe_batches is not None else None)
+                elif self._queue:
                     sampled, stats_dev = self._queue.popleft(), nstats
         finally:
             pool.shutdown(wait=True)
 
-        hist = History()
-        for p in pending:                            # end-of-run drain
+        hist = History(records=prefix)
+        for i, p in enumerate(pending):              # end-of-run drain
             rec = p if isinstance(p, RoundRecord) else srv._finalize(p)
-            if verbose and not isinstance(p, RoundRecord):
+            if verbose and i >= printed:
                 srv._print_round(rec)
             hist.records.append(rec)
         return params, hist

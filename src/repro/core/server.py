@@ -55,6 +55,7 @@ New code should construct servers through ``repro.api.Experiment``.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -67,6 +68,8 @@ from repro.core import aggregation as agg
 from repro.core import masks as M
 from repro.core.client import Client, probe_stats_dict
 from repro.core.solver import greedy_rows
+from repro.core.state import (ClientStateStore, rng_state_from_arrays,
+                              rng_state_to_arrays, sub_state)
 from repro.core.strategies import ProbeReport
 from repro.models.model import Model, supports_prefix_cut
 
@@ -121,6 +124,24 @@ class History:
                 "wall_s": r.wall_s,
             } for r in self.records]}
 
+    @classmethod
+    def from_json(cls, d: dict) -> "History":
+        """Inverse of :meth:`to_json` (checkpoint restore path).  Mask and
+        cohort entries come back as arrays of the engine's dtypes, so
+        resumed histories compare equal to uninterrupted ones."""
+        hist = cls()
+        for r in d["records"]:
+            hist.records.append(RoundRecord(
+                round=int(r["round"]), test_loss=float(r["test_loss"]),
+                test_acc=float(r["test_acc"]),
+                train_loss=float(r["train_loss"]),
+                mask_matrix=np.asarray(r["mask_matrix"], np.float32),
+                cohort=np.asarray(r["cohort"], np.int64),
+                union_frac=float(r["union_frac"]),
+                uploaded_params=int(r["uploaded_params"]),
+                wall_s=float(r["wall_s"])))
+        return hist
+
 
 @dataclass
 class RoundPlan:
@@ -152,11 +173,16 @@ class FLServer:
                  pipeline: Optional[bool] = None,
                  pipeline_depth: int = 1,
                  strategy: "Optional[Strategy | str]" = None,
-                 mask_aware: Optional[bool] = None):
+                 mask_aware: Optional[bool] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 10):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
         if pipeline_depth < 1:
             raise ValueError(f"pipeline_depth must be >= 1, got {pipeline_depth}")
+        if checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {checkpoint_every}")
         if mask_aware and not supports_prefix_cut(model.cfg):
             raise ValueError(
                 f"mask_aware=True but family {model.cfg.family!r} has no "
@@ -202,22 +228,39 @@ class FLServer:
         # sequential oracle scores the uploaded stats on the host instead
         self._score_fn = (self.strategy.device_score_fn()
                           if engine == "vectorized" else None)
-        # per-client-id probe stats (selection_period > 1); cleared at refresh
-        self._stats_cache: dict[int, dict[str, np.ndarray]] = {}
+        # all per-client-id cross-round state — the probe-stat cache
+        # (selection_period > 1, generation-invalidated at refresh), the
+        # warm-start mask rows (a hint for the next (P1) solve via
+        # SelectionContext.init; never cleared — solve outputs stay
+        # budget-exact regardless), and last-seen rounds — lives in one
+        # flat-array store indexed by client id: O(cohort) gather/scatter
+        # per round at any population size, and the unit of round-boundary
+        # checkpointing (save_state/restore_state)
+        self.state = ClientStateStore(fl.n_clients, self.L)
         self._layer_params: Optional[np.ndarray] = None
-        # host-solver acceleration state (host strategies only):
-        # * _warm_masks — per client id, the last converged mask row; warms
-        #   the next (P1) solve via SelectionContext.init (fewer ICM sweeps
-        #   once utilities stabilise).  Never cleared: it is a hint, not a
-        #   cache — solve outputs stay budget-exact regardless.
-        # * _select_memo — (inputs-key, masks) of the last host solve; an
-        #   identical (cohort, budgets, stats) round skips the solve
-        #   entirely (the "unchanged utilities" early exit).
+        # _select_memo — (inputs-key, masks) of the last host solve; an
+        # identical (cohort, budgets, stats, init) round skips the solve
+        # entirely (the "unchanged utilities" early exit).  Deliberately
+        # not checkpointed: a hit requires byte-identical inputs, under
+        # which the solve is deterministic — dropping it on restore can
+        # only change solve counters, never masks.
         # select_stats counts solves vs memo hits for tests/benchmarks.
-        self._warm_masks: dict[int, np.ndarray] = {}
         self._select_memo: Optional[tuple] = None
         self.select_stats = {"solves": 0, "memo_hits": 0,
-                             "partial_warm_starts": 0}
+                             "partial_warm_starts": 0,
+                             "all_straggler_rounds": 0}
+        self._straggler_warned = False
+        # round-boundary checkpointing (None = off): state is saved every
+        # checkpoint_every completed rounds and at the end of run()
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+
+    @property
+    def _warm_masks(self):
+        """Read-only dict-like view of the store's warm-mask rows
+        (back-compat: iteration yields client ids, ``[id]``/``get`` return
+        row copies)."""
+        return self.state.warm_masks
 
     @property
     def needs_probe(self) -> bool:
@@ -234,9 +277,7 @@ class FLServer:
         if refresh:
             probe_ids = np.asarray(cohort)
         elif needs_probe:
-            probe_ids = np.asarray(
-                [i for i in cohort if int(i) not in self._stats_cache],
-                dtype=np.asarray(cohort).dtype)
+            probe_ids = self.state.missing_stats(np.asarray(cohort))
         else:
             probe_ids = np.zeros((0,), np.int64)
         return RoundPlan(t=t, cohort=cohort, budgets=self._budgets(cohort),
@@ -274,8 +315,26 @@ class FLServer:
         drop = getattr(self.data, "drop_stragglers", None)
         if callable(drop):
             keep = np.asarray(drop(t, cohort, self.rng), bool)
+            if keep.shape != cohort.shape:
+                raise ValueError(
+                    f"drop_stragglers returned keep-mask of shape "
+                    f"{keep.shape} for a round-{t} cohort of shape "
+                    f"{cohort.shape}")
             if keep.any():               # never drop the whole cohort
                 cohort = cohort[keep]
+            else:
+                # every member straggled: the round runs on the full cohort
+                # (an empty round would crash downstream), but no longer
+                # silently — a run dominated by these is not degrading the
+                # way its straggler model says it should
+                self.select_stats["all_straggler_rounds"] += 1
+                if not self._straggler_warned:
+                    warnings.warn(
+                        f"round {t}: drop_stragglers marked the entire "
+                        f"cohort; running it in full instead (counted in "
+                        f"select_stats['all_straggler_rounds']; warning "
+                        f"once per server)", stacklevel=2)
+                    self._straggler_warned = True
         return self._plan_for(cohort, t)
 
     # -- stage 2: sample (host; prefetchable) ----------------------------
@@ -323,21 +382,19 @@ class FLServer:
         round's utilities), so one new client cannot discard every other
         member's warm start (``select_stats["partial_warm_starts"]``
         counts these rounds)."""
-        if not self.strategy.host or not self._warm_masks:
+        if not self.strategy.host or not self.state.has_warm:
             return None
-        rows = [self._warm_masks.get(int(i)) for i in cohort]
-        missing = [r for r, v in enumerate(rows) if v is None]
-        if missing:
+        rows, valid = self.state.warm_rows(cohort)
+        if not valid.all():
             if probe.grad_sq_norms is None:
                 return None      # no utilities to greedy-fill from
             G = np.asarray(probe.grad_sq_norms)
             budgets = np.broadcast_to(np.asarray(budgets), (len(rows),))
-            fill = greedy_rows(G[missing], budgets[missing],
-                               costs=self.layer_costs)
-            for k, r in enumerate(missing):
-                rows[r] = fill[k]
+            missing = np.flatnonzero(~valid)
+            rows[missing] = greedy_rows(G[missing], budgets[missing],
+                                        costs=self.layer_costs)
             self.select_stats["partial_warm_starts"] += 1
-        return np.stack(rows)
+        return rows
 
     def _memo_key(self, plan: RoundPlan, probe: ProbeReport,
                   init: Optional[np.ndarray]) -> tuple:
@@ -375,13 +432,11 @@ class FLServer:
         """
         fl = self.fl
         if plan.refresh:
-            self._stats_cache.clear()
+            self.state.clear_stats()     # generation bump: O(1), any n
         if stats is not None:
-            for r, i in enumerate(plan.probe_ids):
-                self._stats_cache[int(i)] = {k: v[r] for k, v in stats.items()}
+            self.state.set_stat_rows(plan.probe_ids, stats)
         if self.needs_probe:
-            probe = ProbeReport.from_rows(
-                [self._stats_cache[int(i)] for i in plan.cohort])
+            probe = ProbeReport(**self.state.stat_rows(plan.cohort))
         else:
             probe = ProbeReport(grad_sq_norms=np.zeros((len(plan.cohort),
                                                         self.L), np.float32))
@@ -406,8 +461,7 @@ class FLServer:
             self.select_stats["solves"] += 1
             if memoizable:
                 self._select_memo = (key, masks.copy())
-        for r, i in enumerate(plan.cohort):
-            self._warm_masks[int(i)] = masks[r].copy()
+        self.state.set_warm_rows(plan.cohort, masks, t=plan.t)
         return masks
 
     def select_masks(self, params: PyTree, cohort: np.ndarray,
@@ -483,24 +537,87 @@ class FLServer:
                                 test_loss, test_acc, time.time() - t0)
         return params, rec
 
+    # -- round-boundary checkpointing ------------------------------------
+    def _is_ckpt_round(self, t_next: int, T: int) -> bool:
+        """Save once ``t_next`` rounds have completed?  Boundaries fall
+        every ``checkpoint_every`` rounds plus the end of the run."""
+        if self.checkpoint_dir is None:
+            return False
+        return t_next % self.checkpoint_every == 0 or t_next == T
+
+    def save_state(self, params: PyTree, t_next: int,
+                   history: History) -> str:
+        """Checkpoint the full resumable state after ``t_next`` completed
+        rounds: params, the client-state store, the server rng, and (when
+        the task exposes ``state_dict``) the task's stream state, as one
+        flat-array tree; History and select_stats ride the manifest."""
+        from repro.ckpt import save_checkpoint
+        tree = {"params": params,
+                "client": self.state.state_dict(),
+                "server_rng": rng_state_to_arrays(self.rng)}
+        task_sd = getattr(self.data, "state_dict", None)
+        if callable(task_sd):
+            tree["task"] = task_sd()
+        extra = {"round": t_next, "history": history.to_json(),
+                 "select_stats": dict(self.select_stats)}
+        return save_checkpoint(self.checkpoint_dir, t_next, tree, extra=extra)
+
+    def restore_state(self, params_template: PyTree,
+                      step: Optional[int] = None
+                      ) -> Optional[tuple[PyTree, int, History]]:
+        """Restore the latest (or ``step``) checkpoint into this server.
+
+        Returns ``(params, completed_rounds, history)``, or None when the
+        checkpoint dir is unset/empty.  Params restore strictly against the
+        template (shape-checked); store/rng/task namespaces restore
+        byte-exact, so ``run(params, start=completed_rounds)`` continues
+        bit-identically on masks."""
+        from repro.ckpt import (latest_step, load_checkpoint_arrays,
+                                restore_checkpoint)
+        if self.checkpoint_dir is None:
+            return None
+        step = latest_step(self.checkpoint_dir) if step is None else step
+        if step is None:
+            return None
+        restored, _ = restore_checkpoint(self.checkpoint_dir,
+                                         {"params": params_template}, step)
+        flat, manifest = load_checkpoint_arrays(self.checkpoint_dir, step)
+        self.state.load_state_dict(sub_state(flat, "client/"))
+        rng_state_from_arrays(sub_state(flat, "server_rng/"), self.rng)
+        task_state = sub_state(flat, "task/")
+        task_ld = getattr(self.data, "load_state_dict", None)
+        if task_state and callable(task_ld):
+            task_ld(task_state)
+        self._select_memo = None         # value-safe to drop (see __init__)
+        extra = manifest["extra"]
+        self.select_stats.update(extra.get("select_stats", {}))
+        return (restored["params"], int(extra["round"]),
+                History.from_json(extra["history"]))
+
     def run(self, params: PyTree, rounds: Optional[int] = None,
-            verbose: bool = False) -> tuple[PyTree, History]:
+            verbose: bool = False, *, start: int = 0,
+            history: Optional[History] = None) -> tuple[PyTree, History]:
+        """Run rounds ``start..rounds-1`` (``start``/``history`` come from
+        :meth:`restore_state` on resume), checkpointing at boundaries when
+        ``checkpoint_dir`` is set."""
         T = rounds if rounds is not None else self.fl.rounds
         # legacy sampling redraws the test set every round (mutating
         # _test_rng) — hoisting eval data out of the loop would change its
         # semantics, so legacy runs always take the synchronous path
         legacy = getattr(self.data, "legacy_sampling", False)
         if self.engine == "vectorized" and self.pipeline and not legacy \
-                and T > 0:
+                and T > start:
             from repro.core.scheduler import RoundScheduler
             return RoundScheduler(self, depth=self.pipeline_depth).run(
-                params, T, verbose)
-        hist = History()
-        for t in range(T):
+                params, T, verbose, start=start, history=history)
+        hist = history if history is not None else History()
+        for t in range(start, T):
             params, rec = self.run_round(params, t)
             hist.records.append(rec)
             if verbose:
                 self._print_round(rec)
+            if self._is_ckpt_round(t + 1, T):
+                self.save_state(params, t + 1, hist)
         return params, hist
 
     # -- streaming pipeline (repro.core.scheduler.RoundScheduler) ---------

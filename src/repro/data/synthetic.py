@@ -41,6 +41,9 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.state import (ClientStreamState, rng_state_from_arrays,
+                              rng_state_to_arrays, sub_state)
+
 
 @dataclass
 class FederatedTaskConfig:
@@ -116,16 +119,17 @@ class SyntheticFederatedData:
             (cfg.samples_per_client *
              np.exp(rng.randn(cfg.n_clients) * 0.3)).astype(int), 8)
 
-        self._rngs = [np.random.RandomState(cfg.seed * 1000 + 7 * i + 1)
-                      for i in range(cfg.n_clients)]
+        # per-client data streams: flat draw counters + rng streams created
+        # lazily on first touch (O(touched) host memory at 10⁵–10⁶ client
+        # populations; each stream's seed depends only on (seed, i), so
+        # laziness never changes a draw).  The depth-k round scheduler
+        # prefetches rounds ahead of wall-clock execution; equality of the
+        # positions (and of the streams' final states) across scheduled and
+        # synchronous runs is the observable half of the stream-order
+        # parity contract (tests/test_scheduler.py).
+        self._streams = ClientStreamState(
+            cfg.n_clients, lambda i, s=cfg.seed: s * 1000 + 7 * i + 1)
         self._test_rng = np.random.RandomState(cfg.seed + 999)
-        # cross-round per-client stream bookkeeping: samples drawn from each
-        # client's rng stream so far.  The depth-k round scheduler prefetches
-        # rounds ahead of wall-clock execution; equality of these counters
-        # (and of the streams' final states) across scheduled and synchronous
-        # runs is the observable half of the stream-order parity contract
-        # (tests/test_scheduler.py).
-        self._stream_draws = np.zeros(cfg.n_clients, np.int64)
 
         if cfg.modality == "patches":
             # class prototypes in patch-embedding space + per-domain style
@@ -336,15 +340,34 @@ class SyntheticFederatedData:
             return self._sample_legacy(rng, label_p, domain, n)
         return self._sample_vec(rng, label_p, domain, n)
 
+    @property
+    def _rngs(self) -> ClientStreamState:
+        """Back-compat: ``data._rngs[i]`` still yields client i's stream."""
+        return self._streams
+
     def stream_positions(self) -> np.ndarray:
         """(n_clients,) samples drawn per client stream so far — the
         cross-round bookkeeping the scheduler parity tests compare."""
-        return self._stream_draws.copy()
+        return self._streams.positions.copy()
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Flat-array resumable state: stream positions + the touched
+        streams' rng states + the pretrain/legacy rng.  The held-out rng is
+        deliberately absent — the fixed test set is that stream's first and
+        only consumer, so a fresh task redraws it identically."""
+        d = {f"streams/{k}": v for k, v in self._streams.state_dict().items()}
+        d.update({f"test_rng/{k}": v
+                  for k, v in rng_state_to_arrays(self._test_rng).items()})
+        return d
+
+    def load_state_dict(self, d: dict[str, np.ndarray]) -> None:
+        self._streams.load_state_dict(sub_state(d, "streams/"))
+        rng_state_from_arrays(sub_state(d, "test_rng/"), self._test_rng)
 
     def client_batch(self, i: int, batch_size: int) -> dict:
         """One minibatch from client i's distribution."""
-        self._stream_draws[i] += batch_size
-        return self._dispatch(self._rngs[i], self.client_label_p[i],
+        self._streams.advance(i, batch_size)
+        return self._dispatch(self._streams.rng(i), self.client_label_p[i],
                               self.client_domain[i], batch_size)
 
     def client_batches(self, i: int, batch_size: int, n: int) -> dict:
@@ -357,8 +380,8 @@ class SyntheticFederatedData:
         if self.legacy_sampling:
             bs = [self.client_batch(i, batch_size) for _ in range(n)]
             return {k: np.stack([b[k] for b in bs]) for k in bs[0]}
-        self._stream_draws[i] += n * batch_size
-        flat = self._sample_vec(self._rngs[i], self.client_label_p[i],
+        self._streams.advance(i, n * batch_size)
+        flat = self._sample_vec(self._streams.rng(i), self.client_label_p[i],
                                 self.client_domain[i], n * batch_size)
         return {k: v.reshape((n, batch_size) + v.shape[1:])
                 for k, v in flat.items()}

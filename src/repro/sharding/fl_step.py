@@ -62,6 +62,29 @@ def _shard_map(f, *, mesh, in_specs, out_specs, axis_names, check_vma):
                check_rep=False)
 
 
+def shard_cohort_rows(mesh, rows: PyTree) -> PyTree:
+    """Place per-cohort-member rows on the mesh, leading (cohort) axis
+    sharded over the client axes — the DESIGN.md §4 mapping (one cohort
+    member per pod×data coordinate) applied to gathered client-state rows
+    (warm-start masks, probe stats) so cohort size scales with the mesh.
+
+    Rows whose cohort axis does not divide the client-axis extent are
+    replicated instead (values unchanged either way, so the single-device
+    path is bit-identical to the host gather).  Accepts a single array or
+    any pytree of (cohort, ...) arrays.
+    """
+    caxes = rules.client_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in caxes])) if caxes else 1
+
+    def place(x):
+        x = jnp.asarray(x)
+        spec = P(caxes) if x.ndim and n > 1 and x.shape[0] % n == 0 \
+            else P(*([None] * x.ndim))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(place, rows)
+
+
 def gscale(x, c):
     """Value x, gradient scaled by c (c may broadcast)."""
     c = c.astype(x.dtype)

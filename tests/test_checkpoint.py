@@ -1,0 +1,243 @@
+"""Checkpoint/resume: partial restore, robust step discovery, tmp sweeps,
+roundtrips across model families, and bit-exact resume parity.
+
+The resume-parity contract is the spine of the population-state feature:
+running T rounds straight must equal running t, killing the process, and
+resuming from the round-t checkpoint with a *fresh* server and task —
+bit-identically on cohorts/masks/stream draws, within fp tolerance on
+params — in both engines and at pipeline_depth > 1.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Experiment
+from repro.ckpt import (latest_step, load_checkpoint_arrays,
+                        restore_checkpoint, save_checkpoint, sweep_tmp_dirs)
+from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
+from repro.core.server import FLServer, History
+from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
+from repro.models.model import Model
+
+
+# --- ckpt module: partial restore, latest_step, tmp sweep ------------------
+
+def test_restore_reports_restored_keys(tmp_path):
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 0, {"w": jnp.ones((3,)), "b": jnp.zeros((2,))})
+    out, manifest = restore_checkpoint(d, {"w": jnp.zeros((3,)),
+                                           "b": jnp.ones((2,))})
+    assert sorted(manifest["restored"]) == ["b", "w"]
+    assert manifest["skipped"] == []
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.ones(3))
+
+
+def test_partial_restore_keeps_template_leaf(tmp_path):
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 0, {"w": jnp.ones((3,))})
+    template = {"w": jnp.zeros((3,)), "opt_state": jnp.full((2,), 7.0)}
+    out, manifest = restore_checkpoint(d, template, partial=True)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.ones(3))
+    np.testing.assert_array_equal(np.asarray(out["opt_state"]),
+                                  np.full(2, 7.0))
+    assert manifest["restored"] == ["w"]
+    assert manifest["skipped"] == ["opt_state"]
+
+
+def test_strict_restore_raises_on_missing_key(tmp_path):
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 0, {"w": jnp.ones((3,))})
+    with pytest.raises(KeyError, match="partial=True"):
+        restore_checkpoint(d, {"w": jnp.zeros((3,)), "extra": jnp.zeros(1)})
+
+
+def test_latest_step_skips_non_numeric_entries(tmp_path):
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 3, {"w": jnp.ones(2)})
+    os.makedirs(os.path.join(d, "step_final"))       # stray non-checkpoint
+    os.makedirs(os.path.join(d, "step_"))
+    assert latest_step(d) == 3
+
+
+def test_save_sweeps_orphaned_tmp_dirs(tmp_path):
+    d = str(tmp_path / "c")
+    os.makedirs(os.path.join(d, "tmporphan"))        # interrupted save
+    with open(os.path.join(d, "tmporphan", "arrays.npz"), "w") as f:
+        f.write("junk")
+    save_checkpoint(d, 1, {"w": jnp.ones(2)})
+    assert not os.path.exists(os.path.join(d, "tmporphan"))
+    assert latest_step(d) == 1
+    # sweep is also callable standalone
+    os.makedirs(os.path.join(d, "tmpagain"))
+    assert sweep_tmp_dirs(d) == [os.path.join(d, "tmpagain")]
+
+
+@pytest.mark.parametrize("arch", ["tinyllama_1_1b",        # dense
+                                  "deepseek_v2_lite_16b",  # moe
+                                  "mamba2_370m"])          # ssm
+def test_checkpoint_roundtrip_families(arch, tmp_path):
+    cfg = reduced(get_arch(arch), n_layers=2, d_model=64)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 2, params, extra={"round": 2})
+    template = jax.tree.map(jnp.zeros_like, params)
+    restored, manifest = restore_checkpoint(d, template)
+    assert manifest["extra"]["round"] == 2
+    assert manifest["skipped"] == []
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- resume parity ---------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = reduced(get_arch("xlm_roberta_base"), n_layers=4, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    task = FederatedTaskConfig(
+        n_clients=12, n_classes=10, vocab_size=cfg.vocab_size, seq_len=8,
+        samples_per_client=16, skew="label", objective="classification")
+    return model, params, task
+
+
+def _records_equal(h_a, h_b, atol=1e-5):
+    assert len(h_a.records) == len(h_b.records)
+    for ra, rb in zip(h_a.records, h_b.records):
+        np.testing.assert_array_equal(ra.cohort, rb.cohort)
+        np.testing.assert_array_equal(ra.mask_matrix, rb.mask_matrix)
+        assert ra.train_loss == pytest.approx(rb.train_loss, abs=atol)
+        assert ra.test_loss == pytest.approx(rb.test_loss, abs=atol)
+
+
+def _params_close(p_a, p_b, atol=1e-5):
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(np.abs(np.asarray(a, np.float32)
+                                  - np.asarray(b, np.float32)).max()),
+        p_a, p_b)))
+    assert err < atol, f"param divergence {err}"
+
+
+def _fl(period=1, rounds=6):
+    return FLConfig(n_clients=12, cohort_size=4, rounds=rounds,
+                    local_steps=2, lr=0.01, batch_size=4, strategy="ours",
+                    budget=2, selection_period=period, lam=1.0, seed=29)
+
+
+@pytest.mark.parametrize("engine,depth,period", [
+    ("sequential", 1, 1),      # paper-literal oracle loop
+    ("vectorized", 1, 1),      # streaming scheduler, double buffer
+    ("vectorized", 3, 1),      # deep lookahead crosses the ckpt barrier
+    ("vectorized", 2, 2),      # stats-cache survives the save/restore
+])
+def test_resume_parity(world, tmp_path, engine, depth, period):
+    """6 rounds straight == 3 + save + fresh server/task + restore + 3:
+    cohorts/masks/stream draws bit-identical, params within fp."""
+    model, params, task = world
+    fl = _fl(period)
+    d = str(tmp_path / "ckpt")
+
+    data_s = SyntheticFederatedData(task)
+    p_straight, h_straight = FLServer(
+        model, fl, data_s, engine=engine,
+        pipeline_depth=depth).run(params, rounds=6)
+
+    # interrupted run: checkpoint lands exactly at round 3, then "crash"
+    data_k = SyntheticFederatedData(task)
+    srv_k = FLServer(model, fl, data_k, engine=engine, pipeline_depth=depth,
+                     checkpoint_dir=d, checkpoint_every=3)
+    srv_k.run(params, rounds=3)
+    assert latest_step(d) == 3
+
+    # resume on a FRESH server + task (nothing carried over in-process)
+    data_r = SyntheticFederatedData(task)
+    srv_r = FLServer(model, fl, data_r, engine=engine, pipeline_depth=depth,
+                     checkpoint_dir=d, checkpoint_every=3)
+    restored = srv_r.restore_state(params)
+    assert restored is not None
+    p_mid, start, hist = restored
+    assert start == 3 and len(hist.records) == 3
+    p_resumed, h_resumed = srv_r.run(p_mid, rounds=6, start=start,
+                                     history=hist)
+
+    _records_equal(h_resumed, h_straight)
+    _params_close(p_resumed, p_straight)
+    np.testing.assert_array_equal(data_r.stream_positions(),
+                                  data_s.stream_positions())
+
+
+def test_mid_run_checkpoints_match_synchronous_state(world, tmp_path):
+    """Pipelined run with a mid-run boundary (checkpoint_every < rounds):
+    the barrier must stop prefetch from consuming post-boundary rng/stream
+    draws, so the round-2 checkpoint resumes bit-identically too."""
+    model, params, task = world
+    fl = _fl()
+    d = str(tmp_path / "ckpt")
+    data_s = SyntheticFederatedData(task)
+    p_straight, h_straight = FLServer(model, fl, data_s,
+                                      pipeline_depth=3).run(params, rounds=5)
+    data_k = SyntheticFederatedData(task)
+    srv_k = FLServer(model, fl, data_k, pipeline_depth=3,
+                     checkpoint_dir=d, checkpoint_every=2)
+    srv_k.run(params, rounds=5)
+    assert latest_step(d) == 5                 # boundaries at 2, 4, 5
+
+    data_r = SyntheticFederatedData(task)
+    srv_r = FLServer(model, fl, data_r, pipeline_depth=3,
+                     checkpoint_dir=d, checkpoint_every=2)
+    p_mid, start, hist = srv_r.restore_state(params, step=2)
+    assert start == 2
+    p_resumed, h_resumed = srv_r.run(p_mid, rounds=5, start=start,
+                                     history=hist)
+    _records_equal(h_resumed, h_straight)
+    _params_close(p_resumed, p_straight)
+    np.testing.assert_array_equal(data_r.stream_positions(),
+                                  data_s.stream_positions())
+
+
+def test_checkpoint_contents_and_select_stats(world, tmp_path):
+    """What rides the checkpoint: params, store arrays, rng states, task
+    streams, History + select_stats in the manifest."""
+    model, params, task = world
+    d = str(tmp_path / "ckpt")
+    srv = FLServer(model, _fl(), SyntheticFederatedData(task),
+                   checkpoint_dir=d, checkpoint_every=2)
+    srv.run(params, rounds=2)
+    flat, manifest = load_checkpoint_arrays(d)
+    assert any(k.startswith("params/") for k in flat)
+    assert "client/warm" in flat and "client/gen" in flat
+    assert "server_rng/keys" in flat and flat["server_rng/keys"].shape == (624,)
+    assert "task/streams/positions" in flat
+    extra = manifest["extra"]
+    assert extra["round"] == 2
+    assert len(extra["history"]["records"]) == 2
+    assert extra["select_stats"]["solves"] >= 1
+    hist = History.from_json(extra["history"])
+    assert hist.records[1].round == 1
+
+
+def test_experiment_auto_resume(world, tmp_path):
+    """Experiment(checkpoint_dir=...) resumes transparently: run 2 rounds,
+    rebuild from scratch, run(rounds=4) continues — equal to 4 straight."""
+    model, params, task = world
+    d = str(tmp_path / "ckpt")
+
+    def exp(ckpt):
+        return Experiment(model, SyntheticFederatedData(task), "ours",
+                          rounds=4, cohort_size=4, local_steps=2,
+                          batch_size=4, budget=2, lam=1.0, seed=29,
+                          checkpoint_dir=ckpt, checkpoint_every=2)
+
+    p_straight, h_straight = exp(None).run(params)
+    exp(d).run(params, rounds=2)
+    p_resumed, h_resumed = exp(d).run(params)        # picks up at round 2
+    _records_equal(h_resumed, h_straight)
+    _params_close(p_resumed, p_straight)
+    # a checkpoint at/past the requested horizon returns the restored state
+    p_again, h_again = exp(d).run(params)
+    assert len(h_again.records) == 4
+    _params_close(p_again, p_resumed, atol=1e-7)

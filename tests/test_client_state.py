@@ -1,0 +1,227 @@
+"""ClientStateStore / ClientStreamState: flat-array population state.
+
+O(cohort) gather/scatter semantics, O(1) generation invalidation, lazy
+stream materialisation, byte-exact state_dict roundtrips, the dict-like
+back-compat views, and population-scale construction (10⁵–10⁶ ids).
+"""
+import numpy as np
+import pytest
+
+from repro.core.state import (ClientStateStore, ClientStreamState,
+                              rng_state_from_arrays, rng_state_to_arrays,
+                              sub_state)
+
+
+# --- rng pack/unpack -------------------------------------------------------
+
+def test_rng_state_arrays_roundtrip():
+    rng = np.random.RandomState(42)
+    rng.randn(100)
+    rng.standard_normal()                      # leave a cached gaussian
+    packed = rng_state_to_arrays(rng)
+    twin = rng_state_from_arrays(packed)
+    np.testing.assert_array_equal(rng.randn(50), twin.randn(50))
+    np.testing.assert_array_equal(rng.randint(0, 1000, 20),
+                                  twin.randint(0, 1000, 20))
+
+
+def test_rng_state_restore_in_place():
+    rng = np.random.RandomState(7)
+    rng.randn(10)
+    packed = rng_state_to_arrays(rng)
+    ahead = rng.randn(5)                       # advance past the snapshot
+    rng_state_from_arrays(packed, rng)         # rewind
+    np.testing.assert_array_equal(rng.randn(5), ahead)
+
+
+def test_sub_state_strips_prefix():
+    d = {"a/x": np.zeros(1), "a/y": np.ones(1), "b/x": np.full(1, 2.0)}
+    sub = sub_state(d, "a/")
+    assert set(sub) == {"x", "y"}
+
+
+# --- ClientStateStore: warm-mask rows --------------------------------------
+
+def test_warm_rows_gather_scatter():
+    store = ClientStateStore(100, 4)
+    assert not store.has_warm
+    cohort = np.array([3, 17, 42])
+    masks = np.eye(3, 4, dtype=np.float32)
+    store.set_warm_rows(cohort, masks, t=5)
+    rows, valid = store.warm_rows([17, 99, 3])
+    np.testing.assert_array_equal(valid, [True, False, True])
+    np.testing.assert_array_equal(rows[0], masks[1])
+    np.testing.assert_array_equal(rows[2], masks[0])
+    np.testing.assert_array_equal(rows[1], np.zeros(4))
+    np.testing.assert_array_equal(store.warm_ids(), [3, 17, 42])
+    assert store.last_seen[17] == 5 and store.last_seen[99] == -1
+
+
+def test_warm_rows_are_copies():
+    store = ClientStateStore(10, 4)
+    store.set_warm_rows([1], np.ones((1, 4), np.float32))
+    rows, _ = store.warm_rows([1])
+    rows[0, 0] = 99.0
+    assert store.warm_rows([1])[0][0, 0] == 1.0
+
+
+def test_set_warm_rows_shape_validated():
+    store = ClientStateStore(10, 4)
+    with pytest.raises(ValueError, match="mask rows"):
+        store.set_warm_rows([1, 2], np.ones((2, 5), np.float32))
+
+
+def test_warm_mask_view_compat():
+    """The dict-like view the old ``FLServer._warm_masks`` pokes expect."""
+    store = ClientStateStore(50, 3)
+    view = store.warm_masks
+    assert len(view) == 0 and not view
+    store.set_warm_rows([4, 9], np.ones((2, 3), np.float32))
+    assert set(view) == {4, 9}
+    assert len(view) == 2 and 4 in view and 5 not in view
+    np.testing.assert_array_equal(view[9], np.ones(3))
+    assert view.get(5) is None
+    with pytest.raises(KeyError):
+        view[5]
+
+
+# --- ClientStateStore: probe-stat cache ------------------------------------
+
+def test_stats_scatter_gather_and_generation_clear():
+    store = ClientStateStore(100, 4)
+    cohort = np.array([5, 6, 7])
+    assert not store.stats_valid(cohort).any()
+    np.testing.assert_array_equal(store.missing_stats(cohort), cohort)
+
+    stats = {"grad_sq_norms": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    store.set_stat_rows(cohort, stats)
+    assert store.stats_valid(cohort).all()
+    assert len(store.missing_stats(cohort)) == 0
+    got = store.stat_rows([7, 5])
+    np.testing.assert_array_equal(got["grad_sq_norms"],
+                                  stats["grad_sq_norms"][[2, 0]])
+
+    store.clear_stats()                        # O(1) generation bump
+    assert not store.stats_valid(cohort).any()
+    with pytest.raises(KeyError, match="no cached stats"):
+        store.stat_rows(cohort)
+
+    # re-scatter a subset in the new generation; the rest stay invalid
+    store.set_stat_rows([6], {"grad_sq_norms": np.ones((1, 4), np.float32)})
+    np.testing.assert_array_equal(store.stats_valid(cohort),
+                                  [False, True, False])
+    np.testing.assert_array_equal(store.missing_stats(cohort), [5, 7])
+
+
+def test_stats_key_intersection_within_generation():
+    """Mirrors ProbeReport.from_rows: only keys every scatter carried."""
+    store = ClientStateStore(10, 2)
+    store.set_stat_rows([0], {"grad_sq_norms": np.ones((1, 2), np.float32),
+                              "scores": np.ones((1, 2), np.float32)})
+    store.set_stat_rows([1], {"grad_sq_norms": np.zeros((1, 2), np.float32)})
+    assert set(store.stat_rows([0, 1])) == {"grad_sq_norms"}
+
+
+def test_missing_stats_preserves_cohort_dtype():
+    store = ClientStateStore(10, 2)
+    cohort = np.array([1, 2], np.int32)
+    assert store.missing_stats(cohort).dtype == np.int32
+
+
+# --- ClientStateStore: checkpoint roundtrip --------------------------------
+
+def test_store_state_dict_roundtrip():
+    store = ClientStateStore(64, 3)
+    store.set_warm_rows([2, 8], np.ones((2, 3), np.float32), t=4)
+    store.set_stat_rows([2, 8, 9],
+                        {"grad_sq_norms":
+                         np.arange(9, dtype=np.float32).reshape(3, 3)})
+    store.clear_stats()
+    store.set_stat_rows([9], {"grad_sq_norms": np.ones((1, 3), np.float32)})
+
+    twin = ClientStateStore(64, 3)
+    twin.load_state_dict(store.state_dict())
+    np.testing.assert_array_equal(twin.warm_rows([2, 8, 9])[0],
+                                  store.warm_rows([2, 8, 9])[0])
+    np.testing.assert_array_equal(twin.stats_valid(np.arange(64)),
+                                  store.stats_valid(np.arange(64)))
+    np.testing.assert_array_equal(twin.stat_rows([9])["grad_sq_norms"],
+                                  store.stat_rows([9])["grad_sq_norms"])
+    np.testing.assert_array_equal(twin.last_seen, store.last_seen)
+    assert twin.has_warm and len(twin.warm_masks) == 2
+
+
+def test_store_load_rejects_population_mismatch():
+    store = ClientStateStore(10, 3)
+    with pytest.raises(ValueError, match="population or layer count"):
+        ClientStateStore(20, 3).load_state_dict(store.state_dict())
+
+
+# --- ClientStreamState -----------------------------------------------------
+
+def test_streams_lazy_and_bit_identical_to_eager():
+    seed_fn = lambda i: 1000 + 7 * i
+    streams = ClientStreamState(1000, seed_fn)
+    assert len(streams.touched()) == 0
+    draws = streams.rng(42).randn(16)          # ...until first touch
+    np.testing.assert_array_equal(streams.touched(), [42])
+    np.testing.assert_array_equal(
+        draws, np.random.RandomState(seed_fn(42)).randn(16))
+    # indexing back-compat (data._rngs[i] pokes in older tests)
+    assert streams[42] is streams.rng(42)
+
+
+def test_streams_positions_advance():
+    streams = ClientStreamState(10, lambda i: i)
+    streams.advance(3, 8)
+    streams.advance(3, 8)
+    assert streams.positions[3] == 16 and streams.positions.sum() == 16
+
+
+def test_streams_state_roundtrip_mid_stream():
+    seed_fn = lambda i: 31 * i + 5
+    a = ClientStreamState(100, seed_fn)
+    for i in (4, 7):
+        a.rng(i).randn(10)
+        a.advance(i, 10)
+    snap = a.state_dict()
+    ahead = {i: a.rng(i).randn(6) for i in (4, 7, 11)}   # 11: fresh stream
+
+    b = ClientStreamState(100, seed_fn)
+    b.load_state_dict(snap)
+    np.testing.assert_array_equal(b.positions, snap["positions"])
+    for i in (4, 7, 11):                       # touched restored, lazy fresh
+        np.testing.assert_array_equal(b.rng(i).randn(6), ahead[i])
+
+
+def test_streams_state_dict_is_o_touched():
+    streams = ClientStreamState(10**6, lambda i: i)   # eager would be ~2.5GB
+    streams.rng(123456).randn(1)
+    d = streams.state_dict()
+    assert d["keys"].shape == (1, 624)
+    assert d["positions"].shape == (10**6,)
+
+
+def test_streams_load_rejects_population_mismatch():
+    a = ClientStreamState(10, lambda i: i)
+    with pytest.raises(ValueError, match="population size changed"):
+        ClientStreamState(11, lambda i: i).load_state_dict(a.state_dict())
+
+
+# --- population scale ------------------------------------------------------
+
+def test_population_scale_ops_touch_only_cohort():
+    """10⁵-client store: per-round ops are pure O(cohort) gather/scatter
+    (the micro-benchmark gates the wall-clock half of this claim)."""
+    n = 100_000
+    store = ClientStateStore(n, 8)
+    cohort = np.array([17, 4_242, 73_291, 99_999])
+    store.set_stat_rows(cohort, {"grad_sq_norms":
+                                 np.ones((4, 8), np.float32)})
+    store.set_warm_rows(cohort, np.ones((4, 8), np.float32), t=0)
+    assert store.stats_valid(cohort).all()
+    assert int(store._stats_stamp.sum()) == 4          # only cohort stamped
+    store.clear_stats()                                # no O(n) sweep
+    assert not store.stats_valid(cohort).any()
+    rows, valid = store.warm_rows(cohort)
+    assert valid.all() and rows.shape == (4, 8)
