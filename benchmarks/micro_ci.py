@@ -1,5 +1,5 @@
 """CI micro-benchmark gate: round_engine + masked_backward + full_round +
-probe_trim + pipeline_depth + population_state.
+probe_trim + pipeline_depth + population_state + delta_serving.
 
     PYTHONPATH=src python -m benchmarks.micro_ci
 
@@ -8,8 +8,9 @@ Runs the engine micro-benchmarks, records them to
 ``experiments/bench/BENCH_masked_backward.json``,
 ``experiments/bench/BENCH_full_round.json``,
 ``experiments/bench/BENCH_probe_trim.json``,
-``experiments/bench/BENCH_pipeline_depth.json`` and
-``experiments/bench/BENCH_population_state.json`` (uploaded as CI
+``experiments/bench/BENCH_pipeline_depth.json``,
+``experiments/bench/BENCH_population_state.json`` and
+``experiments/bench/BENCH_delta_serving.json`` (uploaded as CI
 artifacts), and enforces the wall-clock budgets: the vectorized engine
 step must not be slower than the sequential oracle at any cohort size, the
 mask-aware engine must not be slower than the dense program at any
@@ -21,7 +22,9 @@ the requirements-trimmed probes must not be slower than the all-stats
 probe, the depth-k lookahead scheduler must not be slower than the
 depth-1 double buffer (paired per-rep ratios), and the population-state
 store's per-round host cost must stay flat when the population grows
-10x (O(cohort) gather/scatter, DESIGN.md §8).  Exits non-zero on a
+10x (O(cohort) gather/scatter, DESIGN.md §8), and the personalized-delta
+serving decode must not be slower than the dense per-user-params baseline
+at any swept (slots, density) (DESIGN.md §9).  Exits non-zero on a
 budget violation.
 """
 from __future__ import annotations
@@ -35,7 +38,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     from benchmarks.common import save_result
-    from benchmarks.run import (full_round_benchmarks,
+    from benchmarks.run import (delta_serving_benchmarks,
+                                full_round_benchmarks,
                                 masked_backward_benchmarks,
                                 pipeline_depth_benchmarks,
                                 population_state_benchmarks,
@@ -55,6 +59,8 @@ def main() -> None:
     save_result("BENCH_pipeline_depth", pdepth)
     popstate = population_state_benchmarks()
     save_result("BENCH_population_state", popstate)
+    serving = delta_serving_benchmarks()
+    save_result("BENCH_delta_serving", serving)
 
     failures = []
     by_cohort: dict = {}
@@ -120,6 +126,17 @@ def main() -> None:
             f"{popstate['paired_ratio']:.2f} > 2.0 vs {pops[0]} clients "
             f"(per-round host cost must be independent of population size)")
 
+    # the delta overlay streams (1+C)·d·f weight bytes per step where the
+    # dense per-user baseline streams B·d·f, and C+1 < B at every swept
+    # density — delta decode must not be slower at ANY (slots, density)
+    # (paired per-rep ratios; 10% CI-jitter headroom, DESIGN.md §9)
+    for row in serving["configs"]:
+        if row["paired_ratio"] > 1.10:
+            failures.append(
+                f"delta_serving: slots={row['slots']} density={row['density']}"
+                f" paired ratio {row['paired_ratio']:.2f} > 1.10 vs dense "
+                f"per-user params")
+
     print(f"full_round speedup over pre-pipeline path: "
           f"{full['speedup']:.2f}x")
     print("masked_backward speedups vs dense: "
@@ -131,6 +148,10 @@ def main() -> None:
           f"{pdepth['paired_ratio']:.2f} vs depth-1")
     print(f"population_state {pops[-1]} vs {pops[0]} clients: paired ratio "
           f"{popstate['paired_ratio']:.2f}")
+    print("delta_serving speedups vs dense per-user params: "
+          + ", ".join(f"b{r['slots']}/k{r['density']}: "
+                      f"{1.0 / r['paired_ratio']:.2f}x"
+                      for r in serving["configs"]))
     if failures:
         for f in failures:
             print(f"BUDGET VIOLATION: {f}", file=sys.stderr)
@@ -138,7 +159,8 @@ def main() -> None:
     print("micro-benchmark budget: OK "
           "(vectorized <= sequential, masked <= dense at every cut and "
           ">=1.5x at the deepest, trimmed probe <= all-stats, "
-          "depth-k <= depth-1, population-state cost flat in n)")
+          "depth-k <= depth-1, population-state cost flat in n, "
+          "delta serving <= dense per-user params at every density)")
 
 
 if __name__ == "__main__":

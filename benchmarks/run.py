@@ -94,6 +94,8 @@ def micro_benchmarks():
     pipeline_depth_benchmarks()
     # population-state store: per-round host cost flat in population size
     population_state_benchmarks()
+    # personalized-delta serving: fused overlay decode vs per-user params
+    delta_serving_benchmarks()
 
 
 def round_engine_benchmarks() -> list[dict]:
@@ -500,6 +502,100 @@ def population_state_benchmarks(cohort_n: int = 8,
         out[f"pop{n}_us_per_round"] = us
         print(f"population_state_n{n}_c{cohort_n},{us:.1f},"
               + ("-" if n == lo else f"{ratio:.2f}x_vs_n{lo}"))
+    return out
+
+
+def delta_serving_benchmarks(slot_counts: tuple = (4, 6),
+                             densities: tuple = (1, 2, 4)) -> dict:
+    """Steady-state decode tok/s: batched delta overlay vs the dense
+    per-user-params baseline, sweeping delta density and slot count.
+
+    Each config serves B slots whose users tuned ``k`` selected layers
+    (k ∈ {1, L/4, L/2} at L=8) of an 8-layer dense model.  The delta row
+    decodes the whole batch against ONE shared parameter set plus a
+    capacity-C per-layer delta entry table (kernels/delta_matmul.py
+    linearity split: per-step weight traffic (1+C)·d·f); the dense row is
+    the honest baseline — a vmapped decode over B private full-parameter
+    copies (B·d·f traffic).  Capacity is the exact per-layer load of a
+    round-robin layer assignment, so C+1 < B at every density and the
+    traffic model predicts the win.  ``micro_ci`` gates delta ≤ dense at
+    every (slots, density) via the median of *paired* per-rep ratios.
+    Returns a dict suitable for BENCH_delta_serving.json.
+    """
+    from repro.configs.base import RuntimeConfig, get_arch, reduced
+    from repro.models.model import Model, _block_shapes
+    from repro.serve import (DeltaOverlay, DeltaRecord, serve_suite,
+                             stack_tree)
+
+    cfg = reduced(get_arch("tinyllama_1_1b"), n_layers=8, d_model=128)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    suite = serve_suite(model)
+    shapes = _block_shapes(cfg, "dense")
+    L, W = cfg.n_layers, 64
+    steps = 8 if FAST else 20
+    reps = 2 if FAST else 5
+    rng = np.random.RandomState(0)
+    out: dict = {"L": L, "d_model": cfg.d_model, "steps": steps,
+                 "reps": reps, "configs": []}
+
+    def record_for(layers):
+        idx = np.sort(np.asarray(layers, np.int32))
+        leaves = {
+            name: (0.01 * rng.standard_normal((len(idx),) + tuple(shp)))
+            .astype(np.float32) for name, shp in shapes.items()}
+        return DeltaRecord(layers=idx, segments={"blocks": (idx, leaves)})
+
+    for B in slot_counts:
+        toks = jnp.arange(B, dtype=jnp.int32)
+        pos = jnp.zeros(B, jnp.int32)
+        bank = stack_tree(params, B)
+        dense_cache0 = stack_tree(
+            model.init_cache(1, W, per_slot=True), B)
+        for k in densities:
+            # round-robin layer assignment: per-layer load == capacity
+            C = -(-B * k // L)                       # ceil(B·k/L)
+            overlay = DeltaOverlay(model, C)
+            for u in range(B):
+                rec = record_for([(u * k + j) % L for j in range(k)])
+                assert overlay.try_admit(u, rec)
+            cache = model.init_cache(B, W, per_slot=True)
+            dcache = dense_cache0
+
+            def delta_step(c):
+                return suite["serve_decode_delta"](params, toks, pos, c,
+                                                   overlay.device(), 0)
+
+            def dense_step(c):
+                return suite["serve_decode_dense"](bank, toks, pos, c, 0)
+
+            # warmup: compile both programs for this (B, C)
+            _, cache = delta_step(cache)
+            _, dcache = dense_step(dcache)
+            delta_t, dense_t = [], []
+            for _ in range(reps):                    # interleave: paired reps
+                for which, times in (("delta", delta_t), ("dense", dense_t)):
+                    step = delta_step if which == "delta" else dense_step
+                    c = cache if which == "delta" else dcache
+                    t0 = time.perf_counter()
+                    for _ in range(steps):
+                        lg, c = step(c)
+                    jax.block_until_ready(lg)
+                    times.append((time.perf_counter() - t0) / steps)
+                    if which == "delta":
+                        cache = c
+                    else:
+                        dcache = c
+            delta_t, dense_t = np.asarray(delta_t), np.asarray(dense_t)
+            ratio = float(np.median(delta_t / dense_t))   # paired per-rep
+            row = {"slots": B, "density": k, "capacity": C,
+                   "paired_ratio": ratio,
+                   "delta_tok_s": float(B / np.min(delta_t)),
+                   "dense_tok_s": float(B / np.min(dense_t))}
+            out["configs"].append(row)
+            print(f"delta_serving_b{B}_k{k}_cap{C},"
+                  f"{np.min(delta_t) * 1e6:.1f},"
+                  f"{1.0 / ratio:.2f}x_vs_dense")
     return out
 
 

@@ -1,0 +1,114 @@
+"""Personalized-delta serving end-to-end (DESIGN.md §9).
+
+The full export → store → serve path: a "client" fine-tunes its selected
+layers (stand-in for an FL round), the round checkpoint is diffed against
+the base parameters into a sparse per-user delta
+(``ckpt.extract_delta``), and a :class:`SlotServer` in ``delta`` mode
+batch-decodes requests from *different* users — each against base + its
+own delta — inside one jitted program.  The script verifies every
+generation against decoding that user's materialised private params
+alone.
+
+    PYTHONPATH=src python examples/serve_personalized.py --slots 2 \
+        --requests 6 --users 3 --delta-layers 2
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import extract_delta, save_checkpoint
+from repro.configs.base import RuntimeConfig, get_arch, reduced
+from repro.launch.serve import Request, SlotServer
+from repro.models.model import Model
+from repro.serve import DeltaStore
+
+
+def finetune_stub(params, layers, seed):
+    """Stand-in for a client's selected-layer fine-tuning: perturb exactly
+    the selected rows of the blocks stack."""
+    rng = np.random.RandomState(seed)
+    sel = np.isin(np.arange(next(iter(params["blocks"].values())).shape[0]),
+                  layers)
+    tuned = dict(params)
+    tuned["blocks"] = {
+        name: np.asarray(leaf, np.float32)
+        + 0.02 * sel.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        * rng.standard_normal(leaf.shape).astype(np.float32)
+        for name, leaf in params["blocks"].items()}
+    return tuned
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--users", type=int, default=3)
+    ap.add_argument("--delta-layers", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch), n_layers=4, d_model=64)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+
+    # --- export: round checkpoint -> sparse per-user deltas ---------------
+    store = DeltaStore(cfg)
+    rng = np.random.RandomState(0)
+    with tempfile.TemporaryDirectory() as ckpt_root:
+        for uid in range(args.users):
+            layers = np.sort(rng.choice(cfg.n_layers,
+                                        size=min(args.delta_layers,
+                                                 cfg.n_layers),
+                                        replace=False)).astype(np.int32)
+            tuned = finetune_stub(params, layers, seed=uid)
+            ckpt_dir = os.path.join(ckpt_root, f"user{uid}")
+            save_checkpoint(ckpt_dir, 1, {"params": tuned, "round": 1})
+            rec = extract_delta(ckpt_dir, params, cfg)   # auto-detect rows
+            assert rec.layers.tolist() == layers.tolist()
+            store.put(uid, rec)
+            print(f"user {uid}: delta layers={rec.layers.tolist()} "
+                  f"({rec.nbytes / 1e3:.0f} kB vs "
+                  f"{sum(np.asarray(l).nbytes for l in jax.tree.leaves(params)) / 1e3:.0f} kB dense)")
+
+    # --- serve: mixed users through the batched delta overlay -------------
+    max_seq = args.prompt_len + args.max_new + 1
+    reqs = [Request(i, rng.randint(0, cfg.vocab_size,
+                                   args.prompt_len).tolist(),
+                    args.max_new, user_id=i % args.users)
+            for i in range(args.requests)]
+    prompts = {r.rid: (list(r.prompt), r.user_id) for r in reqs}
+    server = SlotServer(model, params, args.slots, max_seq, mode="delta",
+                        store=store)
+    done, stats = server.run(reqs)
+    print(f"served {len(done)} requests, {stats['gen_tokens']} tokens in "
+          f"{stats['steps']} steps ({stats['tok_per_s']:.1f} tok/s)")
+
+    # --- verify: batched delta decode == private params alone -------------
+    for r in done:
+        prompt, uid = prompts[r.rid]
+        private = store.materialize(params, uid)
+        cache = model.init_cache(1, max_seq)
+        out = []
+        for t in range(len(prompt) + r.max_new - 1):
+            cur = prompt[t] if t < len(prompt) else out[-1]
+            logits, cache = model.decode_step(private, jnp.asarray([cur]),
+                                              jnp.int32(t), cache)
+            if t >= len(prompt) - 1:
+                out.append(int(jnp.argmax(logits[0])))
+        assert r.generated == out, (r.rid, r.generated, out)
+        print(f"  req {r.rid} (user {uid}): gen={r.generated}  "
+              f"== private-params-alone decode")
+    print("parity OK: one shared program, per-user outputs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,4 @@
-from repro.ckpt.checkpoint import (latest_step,  # noqa: F401
-                                   load_checkpoint_arrays,
+from repro.ckpt.checkpoint import (extract_delta,  # noqa: F401
+                                   latest_step, load_checkpoint_arrays,
                                    restore_checkpoint, save_checkpoint,
                                    sweep_tmp_dirs)

@@ -112,6 +112,35 @@ def load_checkpoint_arrays(directory: str, step: Optional[int] = None
     return flat, manifest
 
 
+def extract_delta(directory: str, base_params: PyTree, cfg,
+                  step: Optional[int] = None, *,
+                  layers=None, atol: float = 0.0):
+    """Diff a saved FL round against ``base_params`` into a sparse
+    :class:`repro.serve.deltas.DeltaRecord` — the export path from a round
+    checkpoint to the personalized-delta serving store (DESIGN.md §9).
+
+    Handles both bare-params checkpoints and FLServer's wrapped trees
+    (keys prefixed ``params/``).  ``layers``: global mask indices to
+    export; ``None`` auto-detects the rows that moved by more than
+    ``atol`` — exactly the client's selected layers.
+    """
+    from repro.serve.deltas import delta_from_params  # lazy: serve -> ckpt
+
+    flat, _ = load_checkpoint_arrays(directory, step)
+    prefix = "params/" if any(k.startswith("params/") for k in flat) else ""
+    tuned: dict[str, dict[str, np.ndarray]] = {}
+    for key, arr in flat.items():
+        if prefix and not key.startswith(prefix):
+            continue
+        parts = key[len(prefix):].split(_SEP)
+        if len(parts) != 2:
+            continue
+        seg, leaf = parts
+        tuned.setdefault(seg, {})[leaf] = arr
+    return delta_from_params(base_params, tuned, cfg, layers=layers,
+                             atol=atol)
+
+
 def restore_checkpoint(directory: str, template: PyTree,
                        step: Optional[int] = None, *,
                        partial: bool = False) -> tuple[PyTree, dict]:

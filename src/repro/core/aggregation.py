@@ -147,3 +147,26 @@ def apply_update_suffix(params: PyTree, update: PyTree, lr: float, cut: int,
 
         out[key] = jax.tree.map(upd, sub, update[key])
     return out
+
+
+def apply_delta_rows(params: PyTree, rows: dict, deltas: dict,
+                     scale: float = 1.0) -> PyTree:
+    """Scatter additive per-layer delta rows into the full tree.
+
+    The row-indexed analogue of :func:`apply_update_suffix` for
+    personalized-delta serving (DESIGN.md §9): ``rows`` maps a segment path
+    to the (k,) local layer indices a user fine-tuned, ``deltas`` to the
+    matching ``{leaf_name: (k, *shape)}`` delta rows.  Segments absent from
+    ``rows`` pass through untouched — exactly the frozen layers.
+    """
+    out = {}
+    for key, sub in params.items():
+        if key not in rows:
+            out[key] = sub
+            continue
+        idx = jnp.asarray(rows[key], jnp.int32)
+        out[key] = jax.tree.map(
+            lambda p, d: p.at[idx].add(
+                scale * jnp.asarray(d).astype(p.dtype)),
+            sub, deltas[key])
+    return out

@@ -1,0 +1,132 @@
+"""Fused "base + per-slot delta" matmul — Pallas TPU kernel.
+
+The personalized-delta serving path (serve/engine.py, DESIGN.md §9)
+batch-decodes B slots against ONE shared weight ``w`` while a small
+capacity-C entry table carries the per-slot selected-layer deltas active at
+the current layer:
+
+    y[b] = x[b] @ w  +  Σ_{e : slots[e] == b}  x[b] @ dw[e]
+
+Entries with ``slots[e] == -1`` are padding (masked to a zero correction).
+The serving invariant is ≤ 1 entry per (slot, layer) — a client selects a
+layer at most once — so per output row there is at most one correction term
+and the accumulation order is immaterial.
+
+Why this shape wins over per-user dense params: the base product streams
+``w`` ONCE for the whole batch (B·d·f MACs at full weight reuse), and the
+correction streams only the C ≤ B active delta slabs, so per-step weight
+traffic is (1 + C)·d·f instead of the B·d·f of B private weight copies.
+At the paper's operating point (a few selected layers of L) C ≪ B.
+
+The pure-jnp fallback replays the kernel's exact blocking and per-entry
+``dynamic_slice → add → dynamic_update_slice`` expression in f32, so the
+two are bit-identical (pinned in tests/test_kernels.py), following the
+masked_update.py / layer_grad_norm.py pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _blocked(f: int, block_f) -> tuple[int, int, int]:
+    bf = f if block_f is None else min(int(block_f), f)
+    pad = (-f) % bf
+    return bf, pad, (f + pad) // bf
+
+
+def _entry_accumulate(acc, x, dw, slots, C: int, d: int, bf: int):
+    """Shared entry loop: sequential per-entry row correction on ``acc``.
+
+    Both the kernel body and the jnp fallback run this exact expression
+    order (dynamic_slice, masked add, dynamic_update_slice per entry), which
+    is what makes them bit-identical.
+    """
+    for e in range(C):
+        se = slots[e]
+        safe = jnp.maximum(se, 0).astype(jnp.int32)
+        m = (se >= 0).astype(jnp.float32)
+        xrow = lax.dynamic_slice(x, (safe, 0), (1, d))
+        corr = jnp.dot(xrow, dw[e], preferred_element_type=jnp.float32)
+        cur = lax.dynamic_slice(acc, (safe, 0), (1, bf))
+        acc = lax.dynamic_update_slice(acc, cur + m * corr, (safe, 0))
+    return acc
+
+
+def base_delta_matmul_2d_jnp(x: jax.Array, w: jax.Array, dw: jax.Array,
+                             slots: jax.Array, *, block_f=None) -> jax.Array:
+    """Pure-jnp fallback for :func:`base_delta_matmul_2d` — the off-TPU
+    serving hot path.  x: (B, d); w: (d, f); dw: (C, d, f); slots: (C,)
+    int32 with -1 padding.  Returns (B, f) in x.dtype."""
+    B, d = x.shape
+    f = w.shape[1]
+    C = dw.shape[0]
+    bf, pad, nb = _blocked(f, block_f)
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    dwf = dw.astype(jnp.float32)
+    if pad:
+        wf = jnp.pad(wf, ((0, 0), (0, pad)))
+        dwf = jnp.pad(dwf, ((0, 0), (0, 0), (0, pad)))
+    slots = slots.astype(jnp.int32)
+    cols = []
+    for j in range(nb):
+        wj = wf[:, j * bf:(j + 1) * bf]
+        dwj = dwf[:, :, j * bf:(j + 1) * bf]
+        acc = jnp.dot(xf, wj, preferred_element_type=jnp.float32)
+        acc = _entry_accumulate(acc, xf, dwj, slots, C, d, bf)
+        cols.append(acc)
+    out = jnp.concatenate(cols, axis=1) if nb > 1 else cols[0]
+    return out[:, :f].astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def base_delta_matmul_2d(x: jax.Array, w: jax.Array, dw: jax.Array,
+                         slots: jax.Array, *, block_f=None,
+                         interpret: bool = False) -> jax.Array:
+    """x: (B, d); w: (d, f); dw: (C, d, f); slots: (C,) int32 (-1 = pad).
+
+    Grid over f-blocks; the full x block and the C delta slabs for the
+    current f-block sit in VMEM, the entry slot ids are scalar-prefetched
+    into SMEM.  Returns (B, f) in x.dtype.
+    """
+    B, d = x.shape
+    f = w.shape[1]
+    C = dw.shape[0]
+    bf, pad, nb = _blocked(f, block_f)
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    dwf = dw.astype(jnp.float32)
+    if pad:
+        wf = jnp.pad(wf, ((0, 0), (0, pad)))
+        dwf = jnp.pad(dwf, ((0, 0), (0, 0), (0, pad)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((B, d), lambda j, *_: (0, 0)),
+            pl.BlockSpec((d, bf), lambda j, *_: (0, j)),
+            pl.BlockSpec((C, d, bf), lambda j, *_: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((B, bf), lambda j, *_: (0, j)),
+    )
+
+    def kernel(slots_s, x_ref, w_ref, dw_ref, out_ref):
+        acc = jnp.dot(x_ref[...], w_ref[...],
+                      preferred_element_type=jnp.float32)
+        acc = _entry_accumulate(acc, x_ref[...], dw_ref, slots_s, C, d, bf)
+        out_ref[...] = acc
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, f + pad), jnp.float32),
+        interpret=interpret,
+    )(slots.astype(jnp.int32), xf, wf, dwf)
+    return out[:, :f].astype(x.dtype)

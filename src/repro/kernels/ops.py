@@ -11,6 +11,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import delta_matmul as _dmm
 from repro.kernels import flash_attention as _fa
 from repro.kernels import layer_grad_norm as _lgn
 from repro.kernels import masked_update as _mu
@@ -132,3 +133,33 @@ def masked_sgd_update(stacked_params: PyTree, stacked_grads: PyTree,
         return out.reshape(p.shape)
 
     return jax.tree.map(upd, stacked_params, stacked_grads)
+
+
+# ---------------------------------------------------------------------------
+# fused base + per-slot delta matmul (personalized-delta serving)
+# ---------------------------------------------------------------------------
+
+def base_delta_matmul(x, w, dw, slots, *, block_f=None,
+                      interpret: Optional[bool] = None,
+                      mode: Optional[str] = None):
+    """``y[b] = x[b] @ w + Σ_{e: slots[e]==b} x[b] @ dw[e]`` — the serving
+    decode projection with per-slot selected-layer deltas (DESIGN.md §9).
+
+    x: (B, 1, d) decode activations (or (B, d)); w: (d, f) shared base
+    weight; dw: (C, d, f) capacity-C per-layer delta entries; slots: (C,)
+    int32 slot owner per entry, -1 = empty.  The Pallas kernel on TPU, the
+    bit-identical pure-jnp fallback elsewhere (``mode`` forces either).
+    """
+    m = _resolve_mode(mode, interpret)
+    squeeze = x.ndim == 3
+    if squeeze:
+        assert x.shape[1] == 1, "delta decode projections are single-token"
+        x2 = x[:, 0]
+    else:
+        x2 = x
+    if m == "jnp":
+        out = _dmm.base_delta_matmul_2d_jnp(x2, w, dw, slots, block_f=block_f)
+    else:
+        out = _dmm.base_delta_matmul_2d(x2, w, dw, slots, block_f=block_f,
+                                        interpret=_auto_interpret(interpret))
+    return out[:, None] if squeeze else out

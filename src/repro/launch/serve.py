@@ -2,17 +2,29 @@
 
 A minimal production-shaped server loop: a fixed pool of B slots, each
 holding one request; finished slots are refilled from the queue without
-stalling the running batch (the KV cache is slot-indexed, so refills just
-reset that slot's entries via position masking).
+stalling the running batch.  The KV cache is the ``per_slot`` layout
+(models/model.py ``init_cache(per_slot=True)``), so every slot advances
+its own position — refills never align the batch.
+
+Three personalization modes (DESIGN.md §9):
+
+* ``shared`` — every request decodes against the base parameters.
+* ``delta``  — per-user selected-layer deltas ride a capacity-C
+  :class:`repro.serve.DeltaOverlay`; ONE jitted decode program serves
+  slots with *different* users' deltas.
+* ``dense``  — the honest baseline: each slot holds the user's private
+  full-parameter copy (materialised on refill), decode is vmapped over
+  the stacked per-slot params.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --slots 4 --requests 10 --max-new 16
+        --slots 4 --requests 10 --max-new 16 --mode delta --delta-layers 2
 """
 from __future__ import annotations
 
 import argparse
 import time
 from dataclasses import dataclass, field
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +32,7 @@ import numpy as np
 
 from repro.configs.base import RuntimeConfig, get_arch, reduced
 from repro.models.model import Model
+from repro.serve import DeltaOverlay, DeltaStore, serve_suite, stack_tree
 
 
 @dataclass
@@ -27,6 +40,7 @@ class Request:
     rid: int
     prompt: list[int]
     max_new: int
+    user_id: int = -1                       # -1: anonymous (base params)
     generated: list[int] = field(default_factory=list)
 
     @property
@@ -35,27 +49,82 @@ class Request:
 
 
 class SlotServer:
-    """B decode slots over a single jitted decode_step."""
+    """B decode slots over a single jitted decode_step.
+
+    ``mode``: "shared" | "delta" | "dense" (see module docstring); the
+    latter two look requests' ``user_id`` up in ``store``.
+    """
 
     def __init__(self, model: Model, params, slots: int, max_seq: int,
-                 window: int = 0):
+                 window: int = 0, *, mode: str = "shared",
+                 store: Optional[DeltaStore] = None, capacity: int = 0):
+        assert mode in ("shared", "delta", "dense"), mode
+        if mode != "shared" and store is None:
+            raise ValueError(f"mode={mode!r} needs a DeltaStore")
         self.model = model
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.window = window
-        self.cache = model.init_cache(slots, max_seq, window=window)
+        self.mode = mode
+        self.store = store
+        self.suite = serve_suite(model)
         self.active: list[Request | None] = [None] * slots
         self.pos = np.zeros(slots, np.int32)        # per-slot position
-        self._step = jax.jit(
-            lambda p, tok, pos, c: model.decode_step(p, tok, pos, c,
-                                                     window=window))
+        if mode == "dense":
+            # stacked per-slot state: private params + a batch-1 cache per slot
+            self.bank = stack_tree(params, slots)
+            self.cache = stack_tree(
+                model.init_cache(1, max_seq, window=window, per_slot=True),
+                slots)
+        else:
+            self.cache = model.init_cache(slots, max_seq, window=window,
+                                          per_slot=True)
+            self.overlay = (DeltaOverlay(model, capacity or slots)
+                            if mode == "delta" else None)
+
+    def _record(self, req: Request):
+        if self.store is None or req.user_id < 0:
+            return None
+        return self.store.get(req.user_id)
+
+    def _free(self, i: int) -> None:
+        self.active[i] = None
+        if self.mode == "delta":
+            self.overlay.release(i)
 
     def _admit(self, queue: list[Request]):
         for i in range(self.slots):
-            if self.active[i] is None and queue:
-                self.active[i] = queue.pop(0)
-                self.pos[i] = 0
+            if self.active[i] is not None or not queue:
+                continue
+            req = queue[0]
+            if self.mode == "delta":
+                if not self.overlay.try_admit(i, self._record(req)):
+                    continue        # overlay full; retry after a release
+            queue.pop(0)
+            if self.mode == "dense":
+                private = (self.store.materialize(self.params, req.user_id)
+                           if req.user_id >= 0 else self.params)
+                self.bank = self.suite["serve_write_params"](
+                    self.bank, private, jnp.int32(i))
+                self.cache = self.suite["serve_reset_slot"](
+                    self.cache, jnp.int32(i), stacked=True)
+            else:
+                self.cache = self.suite["serve_reset_slot"](
+                    self.cache, jnp.int32(i))
+            self.active[i] = req
+            self.pos[i] = 0
+
+    def _decode(self, toks, pos):
+        if self.mode == "shared":
+            return self.suite["serve_decode"](self.params, toks, pos,
+                                              self.cache, self.window)
+        if self.mode == "delta":
+            return self.suite["serve_decode_delta"](
+                self.params, toks, pos, self.cache, self.overlay.device(),
+                self.window)
+        return self.suite["serve_decode_dense"](self.bank, toks, pos,
+                                                self.cache, self.window)
 
     def run(self, requests: list[Request], verbose: bool = False):
         queue = list(requests)
@@ -64,6 +133,11 @@ class SlotServer:
         t0 = time.time()
         while queue or any(r is not None for r in self.active):
             self._admit(queue)
+            if queue and all(r is None for r in self.active):
+                raise RuntimeError(
+                    f"request {queue[0].rid} (user {queue[0].user_id}) "
+                    f"exceeds overlay capacity even on an idle server — "
+                    f"raise --delta-capacity")
             toks = np.zeros(self.slots, np.int32)
             for i, r in enumerate(self.active):
                 if r is None:
@@ -71,13 +145,10 @@ class SlotServer:
                 p = int(self.pos[i])
                 toks[i] = (r.prompt[p] if p < len(r.prompt)
                            else r.generated[-1])
-            # NOTE: the batch shares one position scalar per step; slots are
-            # aligned by admitting at pos 0 (slot-synchronous batching). A
-            # fully position-independent cache is a straightforward extension
-            # (per-slot pos vector into the cache update).
-            pos = jnp.int32(int(self.pos.max(initial=0)))
-            logits, self.cache = self._step(self.params, jnp.asarray(toks),
-                                            pos, self.cache)
+            # per-slot position vector: each slot decodes at its own stream
+            # position; empty slots idle at 0 and are masked on refill
+            logits, self.cache = self._decode(jnp.asarray(toks),
+                                              jnp.asarray(self.pos))
             nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
             steps += 1
             for i, r in enumerate(self.active):
@@ -88,13 +159,37 @@ class SlotServer:
                     r.generated.append(int(nxt[i]))
                 if r.done or self.pos[i] >= self.max_seq - 1:
                     done.append(r)
-                    self.active[i] = None
+                    self._free(i)
             if verbose and steps % 8 == 0:
                 print(f"  step {steps}: {sum(x is not None for x in self.active)}"
                       f" active, {len(queue)} queued, {len(done)} done")
         dt = time.time() - t0
-        return done, {"steps": steps, "wall_s": dt,
-                      "tok_per_s": sum(len(r.generated) for r in done) / dt}
+        gen = sum(len(r.generated) for r in done)
+        return done, {"steps": steps, "wall_s": dt, "gen_tokens": gen,
+                      "tok_per_s": gen / dt if dt > 1e-9 else 0.0}
+
+
+def demo_store(model: Model, params, users: int, layers_per_user: int,
+               seed: int = 0) -> DeltaStore:
+    """A store of synthetic per-user deltas: small noise on a random
+    selected-layer subset per user (stand-in for real FL output)."""
+    cfg = model.cfg
+    store = DeltaStore(cfg)
+    rng = np.random.RandomState(seed)
+    for uid in range(users):
+        layers = rng.choice(cfg.n_layers, size=min(layers_per_user,
+                                                   cfg.n_layers),
+                            replace=False)
+        idx = np.sort(layers).astype(np.int32)
+        tuned = dict(params)
+        tuned["blocks"] = {
+            name: np.asarray(leaf, np.float32)
+            + 0.01 * np.isin(np.arange(leaf.shape[0]), idx).reshape(
+                (-1,) + (1,) * (leaf.ndim - 1))
+            * rng.standard_normal(leaf.shape).astype(np.float32)
+            for name, leaf in params["blocks"].items()}
+        store.put_from_params(uid, params, tuned, layers=idx)
+    return store
 
 
 def main():
@@ -105,23 +200,33 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--window", type=int, default=0)
+    ap.add_argument("--mode", default="shared",
+                    choices=["shared", "delta", "dense"])
+    ap.add_argument("--users", type=int, default=4)
+    ap.add_argument("--delta-layers", type=int, default=2)
+    ap.add_argument("--delta-capacity", type=int, default=0)
     args = ap.parse_args()
 
     cfg = reduced(get_arch(args.arch))
     model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=32))
     params = model.init(jax.random.PRNGKey(0))
+    store = (demo_store(model, params, args.users, args.delta_layers)
+             if args.mode != "shared" else None)
     rng = np.random.RandomState(0)
     reqs = [Request(i, rng.randint(0, cfg.vocab_size,
-                                   args.prompt_len).tolist(), args.max_new)
+                                   args.prompt_len).tolist(), args.max_new,
+                    user_id=(i % args.users if store else -1))
             for i in range(args.requests)]
     server = SlotServer(model, params, args.slots,
                         args.prompt_len + args.max_new + 1,
-                        window=args.window)
+                        window=args.window, mode=args.mode, store=store,
+                        capacity=args.delta_capacity)
     done, stats = server.run(reqs, verbose=True)
     print(f"served {len(done)} requests in {stats['steps']} steps "
-          f"({stats['tok_per_s']:.1f} tok/s on CPU)")
+          f"[mode={args.mode}] ({stats['tok_per_s']:.1f} tok/s, "
+          f"{stats['gen_tokens']} tokens in {stats['wall_s']:.2f}s)")
     for r in done[:3]:
-        print(f"  req {r.rid}: gen={r.generated}")
+        print(f"  req {r.rid} (user {r.user_id}): gen={r.generated}")
 
 
 if __name__ == "__main__":

@@ -115,14 +115,45 @@ def _mask_bias(q_pos: Array, k_pos: Array, *, causal: bool, window: int,
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
+def _mask_bias_per_slot(q_pos: Array, k_pos: Array, *, causal: bool,
+                        window: int, k_valid: Array) -> Array:
+    """Batched :func:`_mask_bias`: q_pos (B,Sq), k_pos/k_valid (B,Sk) →
+    (B,Sq,Sk).  The serving decode path, where every slot sits at its own
+    position in its own cache row."""
+    return jax.vmap(lambda qp, kp, kv: _mask_bias(
+        qp, kp, causal=causal, window=window, k_valid=kv)
+    )(q_pos, k_pos, k_valid)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot delta overlays (personalized-delta serving, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def per_slot_param(base: Array, drows: Array, slots: Array, B: int) -> Array:
+    """Effective small parameter (norm scale / bias) per slot.
+
+    base: (*shape,); drows: (C, *shape) capacity-C delta entries; slots:
+    (C,) int32 owner per entry (-1 = empty).  Returns (B, 1, *shape) f32 —
+    base + the slot's delta row (at most one entry per slot), broadcastable
+    over the decode seq axis.
+    """
+    safe = jnp.maximum(slots, 0)
+    m = (slots >= 0).astype(jnp.float32).reshape((-1,) + (1,) * base.ndim)
+    add = jnp.zeros((B,) + base.shape, jnp.float32)
+    add = add.at[safe].add(m * drows.astype(jnp.float32))
+    return (base.astype(jnp.float32)[None] + add)[:, None].astype(base.dtype)
+
+
 def attend_full(q: Array, k: Array, v: Array, bias: Array, scale: float) -> Array:
-    """q: (B,Sq,H,hd)  k/v: (B,Sk,K,hd)  bias: (Sq,Sk). GQA via reshape."""
+    """q: (B,Sq,H,hd)  k/v: (B,Sk,K,hd)  bias: (Sq,Sk) shared, or
+    (B,Sq,Sk) per-slot (the serving decode path). GQA via reshape."""
     B, Sq, H, hd = q.shape
     Kh = k.shape[2]
     g = H // Kh
     qg = q.reshape(B, Sq, Kh, g, hd)
     logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
-    logits = logits + bias[None, None, None]
+    logits = logits + (bias[:, None, None] if bias.ndim == 3
+                       else bias[None, None, None])
     w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
     return out.reshape(B, Sq, H, hd)
@@ -202,29 +233,54 @@ def attention_fwd(p: dict, x: Array, cfg: ArchConfig, *,
                   cache_pos: Optional[Array] = None,
                   causal: bool = True, window: int = 0, prefix_len: int = 0,
                   cross_kv: Optional[tuple] = None, seq_chunk: int = 1024,
-                  remat_chunk: bool = False):
+                  remat_chunk: bool = False, delta: Optional[dict] = None,
+                  delta_slots: Optional[Array] = None,
+                  delta_mode: str = "jnp"):
     """One attention sub-block (pre-norm, residual added by caller).
 
     cache: {"k": (B,W,Kh,hd), "v": ..., "pos": (W,) int32} — decode mode
     writes the current token at slot ``cache_pos % W`` and attends over the
-    cache.  cross_kv: precomputed (k, v) for encoder-decoder cross-attention.
+    cache.  With a per-slot serving cache (``pos`` shaped (B, W),
+    ``cache_pos``/``positions`` batched) every batch row sits at its own
+    stream position.  cross_kv: precomputed (k, v) for encoder-decoder
+    cross-attention.
+
+    delta/delta_slots: capacity-C per-slot parameter deltas for this layer
+    ({leaf_name: (C, *shape)} + (C,) owner slot ids, -1 = empty) — the
+    personalized-delta serving overlay (DESIGN.md §9); projections route
+    through :func:`repro.kernels.ops.base_delta_matmul`.
     """
+    from repro.kernels import ops as _kops
     B, S, d = x.shape
     H, Kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     scale = 1.0 / math.sqrt(hd)
 
-    h = rms_norm(x, p["ln"], cfg.norm_eps)
-    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    def proj(h_, name):
+        if delta is not None and name in delta:
+            return _kops.base_delta_matmul(h_, p[name], delta[name],
+                                           delta_slots, mode=delta_mode)
+        return h_ @ p[name]
+
+    ln = p["ln"]
+    if delta is not None and "ln" in delta:
+        ln = per_slot_param(ln, delta["ln"], delta_slots, B)
+    h = rms_norm(x, ln, cfg.norm_eps)
+    q = proj(h, "wq").reshape(B, S, H, hd)
     if cross_kv is None:
-        k = (h @ p["wk"]).reshape(B, S, Kh, hd)
-        v = (h @ p["wv"]).reshape(B, S, Kh, hd)
+        k = proj(h, "wk").reshape(B, S, Kh, hd)
+        v = proj(h, "wv").reshape(B, S, Kh, hd)
     else:
         k, v = cross_kv
     if cfg.qkv_bias:
-        q = q + p["bq"].reshape(H, hd)
+        def bias_term(name, nh):
+            if delta is not None and name in delta:
+                return per_slot_param(p[name], delta[name], delta_slots,
+                                      B).reshape(B, 1, nh, hd)
+            return p[name].reshape(nh, hd)
+        q = q + bias_term("bq", H)
         if cross_kv is None:
-            k = k + p["bk"].reshape(Kh, hd)
-            v = v + p["bv"].reshape(Kh, hd)
+            k = k + bias_term("bk", Kh)
+            v = v + bias_term("bv", Kh)
 
     if cfg.rope_theta and cross_kv is None:
         cos_q, sin_q = rope_tables(positions, hd, cfg.rope_theta)
@@ -235,7 +291,22 @@ def attention_fwd(p: dict, x: Array, cfg: ArchConfig, *,
         q = apply_rope(q, cos_q, sin_q)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and cache["pos"].ndim == 2:
+        # Per-slot serving decode: S == 1, cache_pos (B,), pos rows (B, W).
+        # Each slot writes its token at its own ring index and attends only
+        # over its own populated positions — refills never align the batch.
+        W = cache["k"].shape[1]
+        slot = (cache_pos % W).astype(jnp.int32)
+        bidx = jnp.arange(B)
+        ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        cpos = cache["pos"].at[bidx, slot].set(cache_pos.astype(jnp.int32))
+        k_valid = cpos <= cache_pos[:, None]
+        bias = _mask_bias_per_slot(positions, cpos, causal=causal,
+                                   window=window, k_valid=k_valid)
+        out = attend_full(q, ck, cv, bias, scale)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    elif cache is not None:
         # Decode: S == 1. Write k/v at slot cache_pos % W, attend over cache.
         W = cache["k"].shape[1]
         slot = (cache_pos % W).astype(jnp.int32)
@@ -265,7 +336,7 @@ def attention_fwd(p: dict, x: Array, cfg: ArchConfig, *,
                               window=window, prefix_len=prefix_len)
             out = attend_full(q, k, v, bias, scale)
 
-    out = out.reshape(B, S, H * hd) @ p["wo"]
+    out = proj(out.reshape(B, S, H * hd), "wo")
     return out, new_cache
 
 
@@ -292,12 +363,26 @@ def mlp_param_shapes(cfg: ArchConfig, d_ff: Optional[int] = None) -> dict:
     return {"ln": (d,), "wi": (d, 2 * ff), "wo": (ff, d)}   # gated: [gate|up]
 
 
-def mlp_fwd(p: dict, x: Array, cfg: ArchConfig) -> Array:
-    h = rms_norm(x, p["ln"], cfg.norm_eps)
+def mlp_fwd(p: dict, x: Array, cfg: ArchConfig, *,
+            delta: Optional[dict] = None,
+            delta_slots: Optional[Array] = None,
+            delta_mode: str = "jnp") -> Array:
+    from repro.kernels import ops as _kops
+
+    def proj(h_, name):
+        if delta is not None and name in delta:
+            return _kops.base_delta_matmul(h_, p[name], delta[name],
+                                           delta_slots, mode=delta_mode)
+        return h_ @ p[name]
+
+    ln = p["ln"]
+    if delta is not None and "ln" in delta:
+        ln = per_slot_param(ln, delta["ln"], delta_slots, x.shape[0])
+    h = rms_norm(x, ln, cfg.norm_eps)
     act = act_fn(cfg.mlp_act)
     if cfg.mlp_act == "gelu_plain":
-        return act(h @ p["wi"]) @ p["wo"]
+        return proj(act(proj(h, "wi")), "wo")
     ff = p["wi"].shape[-1] // 2
-    gu = h @ p["wi"]
+    gu = proj(h, "wi")
     gate, up = gu[..., :ff], gu[..., ff:]
-    return (act(gate) * up) @ p["wo"]
+    return proj(act(gate) * up, "wo")

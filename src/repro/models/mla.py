@@ -19,8 +19,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ArchConfig
-from repro.models.blocks import (NEG_INF, _mask_bias, apply_rope, rms_norm,
-                                 rope_tables)
+from repro.models.blocks import (NEG_INF, _mask_bias, _mask_bias_per_slot,
+                                 apply_rope, rms_norm, rope_tables)
 
 Array = jax.Array
 
@@ -75,16 +75,31 @@ def mla_fwd(p: dict, x: Array, cfg: ArchConfig, *, positions: Array,
         # Cost per token: O(W·lora) instead of O(W·H·(nope+v)).
         W = cache["ckv"].shape[1]
         slot = (cache_pos % W).astype(jnp.int32)
-        cckv = lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype),
-                                        (0, slot, 0))
-        ckr = lax.dynamic_update_slice(cache["krope"],
-                                       k_rope[:, :, 0].astype(cache["krope"].dtype),
-                                       (0, slot, 0))
-        cpos = lax.dynamic_update_slice(cache["pos"],
-                                        cache_pos[None].astype(jnp.int32), (slot,))
-        k_valid = cpos <= cache_pos
-        bias = _mask_bias(positions, cpos, causal=True, window=window,
-                          k_valid=k_valid)
+        if cache["pos"].ndim == 2:
+            # per-slot serving cache: pos rows (B, W), cache_pos (B,) — each
+            # slot writes its own ring index (see blocks.attention_fwd)
+            bidx = jnp.arange(B)
+            cckv = cache["ckv"].at[bidx, slot].set(
+                ckv[:, 0].astype(cache["ckv"].dtype))
+            ckr = cache["krope"].at[bidx, slot].set(
+                k_rope[:, 0, 0].astype(cache["krope"].dtype))
+            cpos = cache["pos"].at[bidx, slot].set(cache_pos.astype(jnp.int32))
+            k_valid = cpos <= cache_pos[:, None]
+            bias = _mask_bias_per_slot(positions, cpos, causal=True,
+                                       window=window, k_valid=k_valid)
+        else:
+            cckv = lax.dynamic_update_slice(cache["ckv"],
+                                            ckv.astype(cache["ckv"].dtype),
+                                            (0, slot, 0))
+            ckr = lax.dynamic_update_slice(cache["krope"],
+                                           k_rope[:, :, 0].astype(cache["krope"].dtype),
+                                           (0, slot, 0))
+            cpos = lax.dynamic_update_slice(cache["pos"],
+                                            cache_pos[None].astype(jnp.int32),
+                                            (slot,))
+            k_valid = cpos <= cache_pos
+            bias = _mask_bias(positions, cpos, causal=True, window=window,
+                              k_valid=k_valid)
         new_cache = {"ckv": cckv, "krope": ckr, "pos": cpos}
 
         lora = cfg.kv_lora_rank
@@ -93,7 +108,8 @@ def mla_fwd(p: dict, x: Array, cfg: ArchConfig, *, positions: Array,
         q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope, wk)            # latent q
         lg = (jnp.einsum("bqhl,bsl->bhqs", q_eff, cckv)
               + jnp.einsum("bqhr,bsr->bhqs", q_rope, ckr)).astype(jnp.float32)
-        wgt = jax.nn.softmax(lg * scale + bias[None, None], axis=-1)
+        wgt = jax.nn.softmax(lg * scale + (bias[:, None] if bias.ndim == 3
+                                           else bias[None, None]), axis=-1)
         ctx = jnp.einsum("bhqs,bsl->bqhl", wgt.astype(cckv.dtype), cckv)
         out = jnp.einsum("bqhl,lhv->bqhv", ctx, wv)
         out = out.reshape(B, S, H * v_dim) @ p["wo"]

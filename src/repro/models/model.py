@@ -73,6 +73,18 @@ def supports_prefix_cut(cfg: ArchConfig) -> bool:
     return cfg.family != "hybrid"
 
 
+def supports_delta_decode(cfg: ArchConfig) -> bool:
+    """Whether :meth:`Model.decode_step` accepts a per-slot delta overlay.
+
+    The overlay rides the ``blocks`` scan as capacity-C per-layer entries
+    (DESIGN.md §9), which requires the plain scanned dense stack: attention
+    + MLP blocks whose projections route through ``ops.base_delta_matmul``.
+    MoE routing is cross-batch (capacity dropping couples slots) and
+    ssm/hybrid blocks have no delta-aware projections yet.
+    """
+    return cfg.family in ("dense", "vlm")
+
+
 def segment_cuts(cut: int, cfg: ArchConfig) -> dict[str, int]:
     """Per-segment frozen-prefix lengths for a global mask-index ``cut``.
 
@@ -283,18 +295,27 @@ def _maybe_remat(fn, runtime: RuntimeConfig):
 def _dense_block_fwd(p: dict, x: Array, cfg: ArchConfig, *, positions,
                      causal, window, prefix_len, seq_chunk,
                      cache=None, cache_pos=None, cross_kv=None,
-                     remat_chunk=False):
+                     remat_chunk=False, delta=None, delta_mode="jnp"):
+    # delta: (slots (C,), {leaf_name: (C, *shape)}) — this layer's row of
+    # the per-slot serving overlay; leaf names are split by sub-block prefix
+    dslots = dattn = dmlp = None
+    if delta is not None:
+        dslots, dleaves = delta
+        dattn = _take(dleaves, "attn_") or None
+        dmlp = _take(dleaves, "mlp_") or None
     attn_out, new_kv = B.attention_fwd(
         _take(p, "attn_"), x, cfg, positions=positions, cache=cache,
         cache_pos=cache_pos, causal=causal, window=window,
-        prefix_len=prefix_len, seq_chunk=seq_chunk, remat_chunk=remat_chunk)
+        prefix_len=prefix_len, seq_chunk=seq_chunk, remat_chunk=remat_chunk,
+        delta=dattn, delta_slots=dslots, delta_mode=delta_mode)
     x = x + attn_out
     if "xattn_ln" in p:   # whisper decoder cross-attention
         xo, _ = B.attention_fwd(_take(p, "xattn_"), x, cfg, positions=positions,
                                 cross_kv=cross_kv, causal=False,
                                 seq_chunk=seq_chunk)
         x = x + xo
-    x = x + B.mlp_fwd(_take(p, "mlp_"), x, cfg)
+    x = x + B.mlp_fwd(_take(p, "mlp_"), x, cfg, delta=dmlp,
+                      delta_slots=dslots, delta_mode=delta_mode)
     return x, new_kv
 
 
@@ -645,19 +666,29 @@ class Model:
 
     # -- decode ---------------------------------------------------------------
     def init_cache(self, batch: int, max_seq: int, *,
-                   window: int = 0, dtype=None) -> PyTree:
-        """KV/state caches for decode. ``window`` caps attention cache size."""
+                   window: int = 0, dtype=None,
+                   per_slot: bool = False) -> PyTree:
+        """KV/state caches for decode. ``window`` caps attention cache size.
+
+        ``per_slot=True`` builds the serving layout: ``pos`` gains a batch
+        axis ((L, B, W) instead of (L, W)) so every slot tracks its own
+        stream position — decode_step then takes a (B,) position vector and
+        refills never have to align the batch (DESIGN.md §9).
+        """
         cfg = self.cfg
         dt = jnp.dtype(dtype or cfg.dtype)
         W = min(window or max_seq, max_seq)
         Kh = cfg.n_kv_heads
         hd = cfg.resolved_head_dim if cfg.n_heads else 0
 
+        def pos_full(*lead):
+            shp = lead + ((batch, W) if per_slot else (W,))
+            return jnp.full(shp, jnp.iinfo(jnp.int32).max, jnp.int32)
+
         def kv(n_layers):
             shp = (n_layers, batch, W, Kh, hd) if n_layers else (batch, W, Kh, hd)
-            pshape = (n_layers, W) if n_layers else (W,)
             return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt),
-                    "pos": jnp.full(pshape, jnp.iinfo(jnp.int32).max, jnp.int32)}
+                    "pos": pos_full(n_layers) if n_layers else pos_full()}
 
         if cfg.family in ("dense", "vlm"):
             return {"blocks": kv(cfg.n_layers)}
@@ -666,7 +697,7 @@ class Model:
                 def mla_cache(n):
                     return {"ckv": jnp.zeros((n, batch, W, cfg.kv_lora_rank), dt),
                             "krope": jnp.zeros((n, batch, W, cfg.qk_rope_dim), dt),
-                            "pos": jnp.full((n, W), jnp.iinfo(jnp.int32).max, jnp.int32)}
+                            "pos": pos_full(n)}
                 c = {"blocks": mla_cache(cfg.n_layers - cfg.first_dense)}
                 if cfg.first_dense:
                     c["dense0"] = mla_cache(cfg.first_dense)
@@ -689,8 +720,7 @@ class Model:
                     "shared_attn": {
                         "k": jnp.zeros((n_groups, batch, W, Kh, hd), dt),
                         "v": jnp.zeros((n_groups, batch, W, Kh, hd), dt),
-                        "pos": jnp.full((n_groups, W), jnp.iinfo(jnp.int32).max,
-                                        jnp.int32)}}
+                        "pos": pos_full(n_groups)}}
         if cfg.family == "audio":
             return {"blocks": kv(cfg.n_layers),
                     "cross_kv": {
@@ -698,30 +728,80 @@ class Model:
                         "v": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, Kh, hd), dt)}}
         raise ValueError(cfg.family)
 
+    def reset_slot(self, cache: PyTree, slot, *, stacked: bool = False) -> PyTree:
+        """Invalidate one batch slot of a decode cache (request refill).
+
+        Position rows become int32-max (= "empty": ``k_valid`` masks every
+        cached entry) and SSM conv/state rows are zeroed; k/v slabs are left
+        in place — they are unreachable until overwritten.  ``stacked=True``
+        addresses the dense per-user layout (leading batch axis from a
+        vmapped decode) instead of the per-slot layout (batch axis second,
+        after the layer axis).
+        """
+        imax = jnp.iinfo(jnp.int32).max
+
+        def walk(tree):
+            out = {}
+            for key, val in tree.items():
+                if isinstance(val, dict):
+                    out[key] = walk(val)
+                elif key == "pos":
+                    out[key] = (val.at[slot].set(imax) if stacked
+                                else val.at[:, slot].set(imax))
+                elif key in ("conv", "state"):
+                    out[key] = (val.at[slot].set(0) if stacked
+                                else val.at[:, slot].set(0))
+                else:
+                    out[key] = val
+            return out
+
+        return walk(cache)
+
     def decode_step(self, params: PyTree, tokens: Array, pos: Array,
-                    cache: PyTree, *, window: int = 0) -> tuple[Array, PyTree]:
-        """One decode step. tokens: (B,) int32; pos: scalar int32.
+                    cache: PyTree, *, window: int = 0,
+                    delta: Optional[dict] = None) -> tuple[Array, PyTree]:
+        """One decode step. tokens: (B,) int32; pos: scalar int32, or a
+        (B,) per-slot position vector over a ``per_slot`` cache (the
+        serving layout — each slot advances independently).
+
+        ``delta``: per-slot selected-layer overlay for the serving path
+        (families with :func:`supports_delta_decode`): ``{"slots": (L, C)
+        int32 owner ids (-1 = empty), "leaves": {name: (L, C, *shape)}}``
+        — capacity-C delta entries per scanned layer, consumed inside the
+        one jitted program so slots with *different* deltas batch together
+        (DESIGN.md §9).
 
         Returns (logits (B,V), new_cache).
         """
         cfg, rt = self.cfg, self.runtime
+        per_slot = jnp.ndim(pos) == 1
+        if delta is not None and not supports_delta_decode(cfg):
+            raise ValueError(f"family {cfg.family!r} has no delta-decode path")
         x = self._embed_tokens(params, tokens[:, None], pos_offset=0)
         if cfg.rope_theta == 0.0 or cfg.family == "audio":
             # sinusoidal position of the *current* slot
-            x = (params["embed"]["tok"][tokens[:, None]]
-                 + B.sinusoid_positions(pos[None], cfg.d_model)[None].astype(x.dtype))
-        positions = pos[None].astype(jnp.int32)
+            sp = (B.sinusoid_positions(pos[:, None], cfg.d_model) if per_slot
+                  else B.sinusoid_positions(pos[None], cfg.d_model)[None])
+            x = params["embed"]["tok"][tokens[:, None]] + sp.astype(x.dtype)
+        positions = (pos[:, None] if per_slot else pos[None]).astype(jnp.int32)
         w = window or cfg.sliding_window
 
         if cfg.family in ("dense", "vlm"):
+            dmode = "pallas" if rt.use_pallas else "jnp"
+
             def step(carry, inp):
-                p, kv = inp
+                p, kv = inp[:2]
+                dl = (inp[2], inp[3]) if delta is not None else None
                 h, new_kv = _dense_block_fwd(p, carry, cfg, positions=positions,
                                              causal=True, window=w, prefix_len=0,
                                              seq_chunk=rt.seq_chunk, cache=kv,
-                                             cache_pos=pos)
+                                             cache_pos=pos, delta=dl,
+                                             delta_mode=dmode)
                 return h, new_kv
-            x, new_kv = lax.scan(step, x, (params["blocks"], cache["blocks"]))
+            xs = (params["blocks"], cache["blocks"])
+            if delta is not None:
+                xs = xs + (delta["slots"], delta["leaves"])
+            x, new_kv = lax.scan(step, x, xs)
             new_cache = {"blocks": new_kv}
 
         elif cfg.family == "moe":

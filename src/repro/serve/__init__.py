@@ -1,0 +1,4 @@
+from repro.serve.deltas import (DeltaRecord, DeltaStore,  # noqa: F401
+                                delta_from_params, mask_index_map)
+from repro.serve.engine import (DeltaOverlay, serve_suite,  # noqa: F401
+                                stack_tree)

@@ -1,0 +1,166 @@
+"""Device-side machinery for personalized-delta serving (DESIGN.md §9).
+
+Two pieces:
+
+* :class:`DeltaOverlay` — the capacity-C per-layer delta entry table the
+  fused decode consumes.  Device state is ``{"slots": (L, C) int32 owner
+  slot ids (-1 = free), "leaves": {name: (L, C, *shape)}}``; a host-side
+  ``slot_ids`` mirror makes admit/release pure bookkeeping.  Admitting a
+  user uploads only *their* delta rows (donated in-place entry writes);
+  releasing a slot just marks entries free — stale leaf rows are masked
+  by the -1 owner id inside the kernel, so eviction is O(1) host work.
+
+* :func:`serve_suite` — the jitted decode programs, registered in the
+  same cache as the training suites (``core.client._JIT_CACHE``) so
+  ``jit_cache_stats()["programs"]`` pins their counts: ONE program serves
+  every mix of per-slot deltas (the overlay is data, not structure).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client import _JIT_CACHE, _JIT_STATS
+from repro.models.model import Model, _block_shapes, supports_delta_decode
+from repro.serve.deltas import DeltaRecord
+
+
+def _write_entry(leaves: dict, l, c, rows: dict) -> dict:
+    """Set entry (l, c) of every overlay leaf to the user's delta row.
+
+    Jitted with the leaf dict donated: one compiled program per overlay
+    shape, and each admit transfers only the (k,)-layer delta rows —
+    never the (L, C, …) table.
+    """
+    return {name: leaf.at[l, c].set(rows[name].astype(leaf.dtype))
+            for name, leaf in leaves.items()}
+
+
+class DeltaOverlay:
+    """Capacity-C per-layer delta entries over the scanned ``blocks`` stack."""
+
+    def __init__(self, model: Model, capacity: int):
+        if not supports_delta_decode(model.cfg):
+            raise ValueError(
+                f"family {model.cfg.family!r} has no delta-decode path")
+        shapes = _block_shapes(model.cfg, "dense")   # per-layer leaf shapes
+        L = model.cfg.n_layers
+        self.capacity = int(capacity)
+        self.leaves = {
+            name: jnp.zeros((L, self.capacity) + tuple(shp), jnp.float32)
+            for name, shp in shapes.items()}
+        self.slot_ids = np.full((L, self.capacity), -1, np.int32)
+        self.entries: dict[int, list[tuple[int, int]]] = {}
+        self._slots_dev = jnp.asarray(self.slot_ids)
+        self._dirty = False
+        self._write = jax.jit(_write_entry, donate_argnums=0)
+
+    @property
+    def n_entries(self) -> int:
+        return int((self.slot_ids >= 0).sum())
+
+    def try_admit(self, slot: int, record: Optional[DeltaRecord]) -> bool:
+        """Claim one entry per selected layer for ``slot`` and upload the
+        delta rows.  Returns False (writing nothing) if any layer's
+        capacity is exhausted — the caller keeps the request queued."""
+        self.release(slot)
+        if record is None or record.n_layers == 0:
+            self.entries[slot] = []
+            return True
+        extra = set(record.segments) - {"blocks"}
+        if extra:
+            raise ValueError(
+                f"delta overlay only serves the scanned 'blocks' stack, "
+                f"record touches {sorted(extra)}")
+        rows_idx, leaves = record.segments["blocks"]
+        plan = []
+        taken: dict[int, int] = {}
+        for l in np.asarray(rows_idx, np.int32):
+            li = int(l)
+            free = np.nonzero(self.slot_ids[li] < 0)[0]
+            free = free[taken.get(li, 0):]
+            if free.size == 0:
+                return False
+            taken[li] = taken.get(li, 0) + 1
+            plan.append((li, int(free[0])))
+        ent = []
+        for j, (li, c) in enumerate(plan):
+            rows = {name: jnp.asarray(leaves[name][j]) for name in self.leaves}
+            self.leaves = self._write(self.leaves, jnp.int32(li),
+                                      jnp.int32(c), rows)
+            self.slot_ids[li, c] = slot
+            ent.append((li, c))
+        self.entries[slot] = ent
+        self._dirty = True
+        return True
+
+    def release(self, slot: int) -> None:
+        for li, c in self.entries.pop(slot, []):
+            self.slot_ids[li, c] = -1
+            self._dirty = True
+
+    def device(self) -> dict:
+        """The ``delta`` argument for :meth:`Model.decode_step`."""
+        if self._dirty:
+            self._slots_dev = jnp.asarray(self.slot_ids)
+            self._dirty = False
+        return {"slots": self._slots_dev, "leaves": self.leaves}
+
+
+def serve_suite(model: Model) -> dict:
+    """Jitted serving programs, cached like the Client suites so
+    ``jit_cache_stats()`` counts their traces.
+
+    One trace per entry regardless of which users' deltas are resident:
+    ``serve_decode`` (shared base), ``serve_decode_delta`` (base + overlay),
+    ``serve_decode_dense`` (vmapped per-slot private params — the dense
+    baseline), ``serve_reset_slot``, ``serve_write_params`` (dense refill).
+    """
+    key = (None if getattr(model, "custom_shard", False)
+           else (model.cfg, model.runtime, "serve"))
+    suite = _JIT_CACHE.get(key) if key is not None else None
+    if suite is not None:
+        _JIT_STATS["hits"] += 1
+        return suite
+
+    def _decode(params, tokens, pos, cache, window):
+        return model.decode_step(params, tokens, pos, cache, window=window)
+
+    def _decode_delta(params, tokens, pos, cache, delta, window):
+        return model.decode_step(params, tokens, pos, cache, window=window,
+                                 delta=delta)
+
+    def _decode_dense(stacked, tokens, pos, cache, window):
+        def one(p, tok, ps, kv):
+            logits, nkv = model.decode_step(p, tok[None], ps[None], kv,
+                                            window=window)
+            return logits[0], nkv
+        return jax.vmap(one)(stacked, tokens, pos, cache)
+
+    def _write_params(stacked, p, b):
+        return jax.tree.map(lambda s, x: s.at[b].set(x.astype(s.dtype)),
+                            stacked, p)
+
+    suite = {
+        "serve_decode": jax.jit(_decode, static_argnums=(4,)),
+        "serve_decode_delta": jax.jit(_decode_delta, static_argnums=(5,)),
+        "serve_decode_dense": jax.jit(_decode_dense, static_argnums=(4,)),
+        "serve_reset_slot": jax.jit(model.reset_slot,
+                                    static_argnames=("stacked",)),
+        "serve_write_params": jax.jit(_write_params, donate_argnums=0),
+    }
+    if key is None:
+        _JIT_STATS["uncached"] += 1
+    else:
+        _JIT_CACHE[key] = suite
+        _JIT_STATS["misses"] += 1
+    return suite
+
+
+def stack_tree(tree, n: int):
+    """n identical copies along a new leading axis (dense-baseline layout)."""
+    return jax.tree.map(lambda x: jnp.repeat(jnp.asarray(x)[None], n, axis=0),
+                        tree)

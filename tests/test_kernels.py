@@ -131,6 +131,78 @@ def test_masked_update_jnp_fallback_bit_identical(L, F, dtype):
                                   np.asarray(fallback, np.float32))
 
 
+DELTA_MM_CASES = [
+    # (B, d, f, C, block_f, dtype)
+    (4, 64, 128, 2, None, jnp.float32),
+    (6, 128, 512, 4, 128, jnp.float32),
+    (3, 32, 100, 1, 64, jnp.float32),      # f padded to the block
+    (4, 64, 256, 3, None, jnp.bfloat16),
+    (2, 16, 48, 2, 32, jnp.bfloat16),
+]
+
+
+def _delta_mm_inputs(B, d, f, C, dtype, seed=5):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (B, d), dtype)
+    w = jax.random.normal(ks[1], (d, f), dtype)
+    dw = (jax.random.normal(ks[2], (C, d, f)) * 0.1).astype(dtype)
+    # serving invariant: ≤1 entry per slot per layer — distinct owners,
+    # with one entry left empty (-1) when capacity allows
+    slots = np.random.RandomState(seed).permutation(B)[:C].astype(np.int32)
+    if C > 1:
+        slots[-1] = -1
+    return x, w, dw, jnp.asarray(slots)
+
+
+@pytest.mark.parametrize("B,d,f,C,block_f,dtype", DELTA_MM_CASES)
+def test_base_delta_matmul_sweep(B, d, f, C, block_f, dtype):
+    """Fused base+delta GEMM vs the unfused oracle: y[b] = x[b]@W, plus
+    x[b]@dw[e] for the entry e owned by slot b (DESIGN.md §9)."""
+    from repro.kernels.delta_matmul import base_delta_matmul_2d
+    x, w, dw, slots = _delta_mm_inputs(B, d, f, C, dtype)
+    out = base_delta_matmul_2d(x, w, dw, slots, block_f=block_f,
+                               interpret=True)
+    x32 = np.asarray(x, np.float32)
+    want = x32 @ np.asarray(w, np.float32)
+    for e, s in enumerate(np.asarray(slots)):
+        if s >= 0:
+            want[s] += x32[s] @ np.asarray(dw[e], np.float32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32), want,
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,d,f,C,block_f,dtype", DELTA_MM_CASES)
+def test_base_delta_matmul_jnp_fallback_bit_identical(B, d, f, C, block_f,
+                                                      dtype):
+    """Kernel (interpret) and the jitted jnp fallback share the per-entry
+    accumulation (_entry_accumulate) and the f-blocking, so the serving
+    decode is bit-identical on and off TPU."""
+    from repro.kernels.delta_matmul import (base_delta_matmul_2d,
+                                            base_delta_matmul_2d_jnp)
+    x, w, dw, slots = _delta_mm_inputs(B, d, f, C, dtype)
+    kernel = base_delta_matmul_2d(x, w, dw, slots, block_f=block_f,
+                                  interpret=True)
+    fallback = jax.jit(lambda *a: base_delta_matmul_2d_jnp(
+        *a, block_f=block_f))(x, w, dw, slots)
+    np.testing.assert_array_equal(np.asarray(kernel, np.float32),
+                                  np.asarray(fallback, np.float32))
+
+
+def test_ops_base_delta_matmul_dispatch():
+    """The ops-layer wrapper: (B,1,d) decode activations route through the
+    2-D path; empty slot table degenerates to the plain GEMM exactly."""
+    x, w, dw, slots = _delta_mm_inputs(3, 16, 32, 2, jnp.float32)
+    out3 = ops.base_delta_matmul(x[:, None], w, dw, slots, mode="jnp")
+    out2 = ops.base_delta_matmul(x, w, dw, slots, mode="jnp")
+    np.testing.assert_array_equal(np.asarray(out3[:, 0]), np.asarray(out2))
+    empty = ops.base_delta_matmul(x, w, dw, jnp.full((2,), -1, jnp.int32),
+                                  mode="jnp")
+    np.testing.assert_allclose(
+        np.asarray(empty),
+        np.asarray(x, np.float32) @ np.asarray(w, np.float32), atol=1e-5)
+
+
 def _small_world():
     from repro.configs.base import RuntimeConfig, get_arch, reduced
     from repro.models.model import Model

@@ -21,6 +21,23 @@ def test_slot_server_completes_all_requests():
     assert stats["steps"] > 0
 
 
+def test_slot_server_stats_are_guarded():
+    """steps / wall_s / gen_tokens reported separately; tok_per_s counts
+    only generated tokens and never divides by ~0 wall time."""
+    cfg = reduced(get_arch("tinyllama_1_1b"), n_layers=2, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    server = SlotServer(model, params, slots=2, max_seq=12)
+    done, stats = server.run([Request(0, [1, 2], 3), Request(1, [3], 2)])
+    assert stats["gen_tokens"] == sum(len(r.generated) for r in done) == 5
+    assert stats["steps"] > 0 and stats["wall_s"] > 0
+    assert stats["tok_per_s"] == stats["gen_tokens"] / stats["wall_s"]
+    # the zero-work edge: no requests, no wall-clock blowup
+    empty_done, empty = SlotServer(model, params, 2, 12).run([])
+    assert empty_done == [] and empty["gen_tokens"] == 0
+    assert empty["tok_per_s"] == 0.0
+
+
 def test_slot_server_matches_single_decode():
     """A lone request through the server == direct decode_step loop."""
     import jax.numpy as jnp
