@@ -35,6 +35,7 @@ def main():
 
     max_seq = args.prompt_len + args.gen
     cache = model.init_cache(args.batch, max_seq, window=args.window)
+    # repro: allow[jit-outside-cache] -- one-shot demo script; jitted once per process, no suite cache to share
     step = jax.jit(lambda p, tok, pos, c: model.decode_step(
         p, tok, pos, c, window=args.window))
 

@@ -1,0 +1,19 @@
+"""Static invariant linter + strict-mode runtime tripwires.
+
+Static side (stdlib-only, no jax needed):
+
+    python -m repro.analysis src benchmarks examples
+
+Runtime side (``REPRO_STRICT=1``): :mod:`repro.analysis.strict`.
+"""
+from repro.analysis.engine import (AnalysisConfig, Finding, RULES,
+                                   run_files, run_paths)
+from repro.analysis import rules as _rules  # noqa: F401  (populates RULES)
+from repro.analysis.strict import (RetraceSentinel, no_implicit_transfers,
+                                   strict_enabled, strict_region)
+
+__all__ = [
+    "AnalysisConfig", "Finding", "RULES", "run_files", "run_paths",
+    "RetraceSentinel", "no_implicit_transfers", "strict_enabled",
+    "strict_region",
+]

@@ -1,0 +1,47 @@
+"""CLI: ``python -m repro.analysis [paths...] [--rule NAME ...]``.
+
+Prints ``file:line rule message`` per finding and exits 1 if any exist.
+Default paths are the repo's linted tree: ``src benchmarks examples``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis.engine import RULES, _ensure_rules_loaded, run_paths
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+
+
+def main(argv=None) -> int:
+    _ensure_rules_loaded()
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static invariant linter (DESIGN.md §10).")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files or directories (default: %(default)s)")
+    ap.add_argument("--rule", action="append", dest="rules", metavar="NAME",
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--root", default=os.getcwd(),
+                    help="repo root for relative paths (default: cwd)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registered rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            print(f"{name}: {RULES[name].doc}")
+        return 0
+
+    findings = run_paths(args.paths, repo_root=args.root, only=args.rules)
+    for f in findings:
+        print(f.format())
+    if findings:
+        print(f"{len(findings)} finding(s) across "
+              f"{len({f.path for f in findings})} file(s)", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,90 @@
+"""Runtime complement to the static rules: opt-in strict mode.
+
+``REPRO_STRICT=1`` arms two runtime tripwires that prove the properties
+the linter can only approximate statically:
+
+* :func:`no_implicit_transfers` — ``jax.transfer_guard("disallow")``
+  around a region, so any *implicit* host↔device transfer (an np array
+  leaking into a jitted program, a device array silently pulled to host)
+  raises instead of costing a hidden sync.  Explicit movement
+  (``jax.device_put``, ``np.asarray(device_arr)`` at a round boundary)
+  stays legal.
+* :class:`RetraceSentinel` — snapshots ``jit_cache_stats()["programs"]``
+  on entry and asserts on exit that no jit-suite entry point compiled a
+  new trace, i.e. steady-state rounds replay cached programs.
+
+jax is imported lazily so ``repro.analysis`` stays importable (and the
+lint CI job runnable) without jax installed.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+STRICT_ENV = "REPRO_STRICT"
+
+
+def strict_enabled() -> bool:
+    return os.environ.get(STRICT_ENV, "").strip() not in ("", "0", "false")
+
+
+@contextlib.contextmanager
+def no_implicit_transfers(enabled: bool = True):
+    """Disallow implicit transfers inside the block (no-op if disabled)."""
+    if not enabled:
+        yield
+        return
+    import jax
+    with jax.transfer_guard("disallow"):
+        yield
+
+
+class RetraceSentinel:
+    """Assert the jit-suite compiled no new programs across a region.
+
+    >>> with RetraceSentinel("steady-state rounds"):
+    ...     scheduler.run(rounds=4)
+    """
+
+    def __init__(self, label: str = "region", enabled: bool = True):
+        self.label = label
+        self.enabled = enabled
+        self.before: dict[str, int] = {}
+        self.after: dict[str, int] = {}
+
+    @staticmethod
+    def _programs() -> dict[str, int]:
+        from repro.core.client import jit_cache_stats
+        return dict(jit_cache_stats()["programs"])
+
+    def __enter__(self) -> "RetraceSentinel":
+        if self.enabled:
+            self.before = self._programs()
+        return self
+
+    def grown(self) -> dict[str, tuple[int, int]]:
+        """entry_point -> (before, after) for every grown counter."""
+        return {k: (self.before.get(k, 0), v)
+                for k, v in self.after.items()
+                if v > self.before.get(k, 0)}
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if not self.enabled or exc_type is not None:
+            return
+        self.after = self._programs()
+        grown = self.grown()
+        if grown:
+            detail = ", ".join(f"{k}: {b}->{a}"
+                               for k, (b, a) in sorted(grown.items()))
+            raise AssertionError(
+                f"retrace inside {self.label}: jit-suite compiled new "
+                f"programs ({detail}) — a steady-state hot loop must "
+                f"replay cached traces")
+
+
+@contextlib.contextmanager
+def strict_region(label: str = "region", enabled: bool | None = None):
+    """Both tripwires at once; ``enabled=None`` reads REPRO_STRICT."""
+    on = strict_enabled() if enabled is None else enabled
+    with no_implicit_transfers(on), RetraceSentinel(label, enabled=on):
+        yield

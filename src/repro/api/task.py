@@ -210,8 +210,9 @@ class DirichletTokenMixtureTask:
             outs = {}
             for i in np.unique(owners):
                 m = owners == i
+                # repro: allow[host-sync] -- one-time test-set assembly on host np arrays, not a round loop
                 outs[int(i)] = (m, self._draw(rng, self._client_cdf[i],
-                                              int(m.sum())))
+                                              int(m.sum())))  # repro: allow[host-sync] -- host np owner counts
             sample = next(iter(outs.values()))[1]
             merged = {k: np.empty((cfg.test_samples,) + v.shape[1:], v.dtype)
                       for k, v in sample.items()}

@@ -69,6 +69,16 @@ def jit_cache_stats() -> dict:
     return dict(_JIT_STATS, entries=len(_JIT_CACHE), programs=programs)
 
 
+def _dev_f32(x) -> Array:
+    """Stage a host value (np array / python scalar) on device as f32 via an
+    *explicit* transfer.  The raw wrappers take host-produced masks/sizes/lr
+    every round; ``jnp.asarray(x, jnp.float32)`` routes python scalars
+    through an implicit transfer that ``jax.transfer_guard("disallow")``
+    (REPRO_STRICT=1) rejects, while ``device_put`` of a host-final np value
+    is sanctioned."""
+    return jax.device_put(np.asarray(x, np.float32))  # repro: allow[host-sync] -- h2d staging of host-final round inputs, not a device sync
+
+
 def masked_suffix_sgd(trainable: PyTree, grads: PyTree, mask: Array, lr,
                       cut: int, cfg, *, mode: str | None = None) -> PyTree:
     """Fused Eq.(3) apply on the trainable suffix slice — the mask-aware
@@ -260,11 +270,11 @@ class Client:
         the pre-mask-aware behaviour); an integer cut dispatches the
         mask-aware program for that frozen-prefix depth.
         """
-        args = (params, batches, jnp.asarray(masks, jnp.float32),
-                jnp.asarray(sizes, jnp.float32), jnp.asarray(lr, jnp.float32))
+        args = (params, batches, _dev_f32(masks), _dev_f32(sizes),
+                _dev_f32(lr))
         if cut is None:
             return self._cohort_update(*args)
-        return self._cohort_update_masked(*args, int(cut))
+        return self._cohort_update_masked(*args, int(cut))  # repro: allow[host-sync] -- cut is a static python int, not a device value
 
     def cohort_update(self, params, batches, masks, sizes, lr,
                       cut: "int | None" = None) -> tuple[PyTree, np.ndarray]:
@@ -382,11 +392,11 @@ class Client:
         cut: optional static prefix cut (see :meth:`cohort_update_raw`).
         Returns (new_params, losses, stats-dict) device arrays.
         """
-        args = (params, batches, jnp.asarray(masks, jnp.float32),
-                jnp.asarray(sizes, jnp.float32), jnp.asarray(lr, jnp.float32),
-                probe_batches)
+        args = (params, batches, _dev_f32(masks), _dev_f32(sizes),
+                _dev_f32(lr), probe_batches)
         if cut is None:
             return self._probe_update_cohort(*args, tuple(reqs), score_fn)
+        # repro: allow[host-sync] -- cut is a static python int, not a device value
         return self._probe_update_cohort_masked(*args, int(cut), tuple(reqs),
                                                 score_fn)
 

@@ -27,7 +27,7 @@ def indices_from_mask(mask) -> tuple[int, ...]:
 
 def union_mask(mask_matrix: np.ndarray) -> np.ndarray:
     """L_t = ∪_i L_i^t from the (cohort, L) mask matrix."""
-    return (np.asarray(mask_matrix).sum(0) > 0).astype(np.float32)
+    return (np.asarray(mask_matrix).sum(0) > 0).astype(np.float32)  # repro: allow[host-sync] -- mask matrices are host np by contract (select stage)
 
 
 def first_trainable_layer(mask_matrix: np.ndarray) -> int:
@@ -38,8 +38,8 @@ def first_trainable_layer(mask_matrix: np.ndarray) -> int:
     skip their backward pass entirely.  An all-empty mask matrix returns L
     (nothing trainable — the forward-only program variant).
     """
-    cols = np.flatnonzero(np.asarray(mask_matrix).sum(0) > 0)
-    return int(cols[0]) if cols.size else int(np.asarray(mask_matrix).shape[-1])
+    cols = np.flatnonzero(np.asarray(mask_matrix).sum(0) > 0)  # repro: allow[host-sync] -- mask matrices are host np by contract (select stage)
+    return int(cols[0]) if cols.size else int(np.asarray(mask_matrix).shape[-1])  # repro: allow[host-sync] -- host np indices, no device value
 
 
 def aggregation_weights(mask_matrix: Array, sizes: Array) -> Array:
@@ -130,8 +130,8 @@ def count_layer_params(params: Any, cfg) -> np.ndarray:
     for seg in layer_layout(cfg):
         leaves = jax.tree.leaves(params[seg.path])
         if seg.path == "shared_attn":
-            out.append(np.array([sum(x.size for x in leaves)]))
+            out.append(np.array([sum(x.size for x in leaves)]))  # repro: allow[host-sync] -- shape-only accounting, computed once per run
         else:
-            per = sum(int(np.prod(x.shape[1:])) for x in leaves)
+            per = sum(int(np.prod(x.shape[1:])) for x in leaves)  # repro: allow[host-sync] -- static shape arithmetic, no device value
             out.append(np.full(seg.count, per))
     return np.concatenate(out).astype(np.int64)

@@ -47,6 +47,8 @@ from __future__ import annotations
 
 import time
 from collections import deque
+
+import jax
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Optional
 
@@ -126,7 +128,10 @@ class RoundScheduler:
         reqs, score_fn = srv._probe_reqs, srv._score_fn
         fuse = srv.needs_probe and fl.selection_period == 1
         srv._ensure_layer_params(params)
-        test = srv.data.test_batch()
+        # hoisted once for the whole run; explicit h2d so the per-round
+        # evaluate_raw dispatch never pays (or strict-mode-trips on) an
+        # implicit np→device transfer
+        test = jax.device_put(srv.data.test_batch())
 
         self._next_plan = start
         self._selected_through = start - 1
@@ -144,7 +149,7 @@ class RoundScheduler:
                                   thread_name_prefix="p1-solver")
         try:
             for t in range(start, T):
-                t0 = time.time()
+                t0 = time.time()  # repro: allow[nondeterminism] -- wall_s telemetry only, never an input to round math
                 plan = sampled.plan
                 # the host solve (stats sync + (P1)) overlaps the in-flight
                 # device program *and* the prefetch below
@@ -181,7 +186,7 @@ class RoundScheduler:
                             params, nxt.probe_batches, reqs, score_fn)
                 loss_dev, acc_dev = client.evaluate_raw(params, test)
                 pending.append((plan, masks, losses, loss_dev, acc_dev,
-                                time.time() - t0))
+                                time.time() - t0))  # repro: allow[nondeterminism] -- wall_s telemetry only
                 if verbose:
                     # print up to the *previous* round: its program has
                     # retired, so materialising it cannot stall the round

@@ -60,7 +60,7 @@ def rng_state_from_arrays(d: dict[str, np.ndarray],
                           rng: Optional[np.random.RandomState] = None
                           ) -> np.random.RandomState:
     """Restore (into ``rng`` if given, else a fresh RandomState)."""
-    rng = rng if rng is not None else np.random.RandomState()
+    rng = rng if rng is not None else np.random.RandomState()  # repro: allow[nondeterminism] -- state is fully overwritten by set_state below
     rng.set_state(("MT19937", np.asarray(d["keys"], np.uint32),
                    int(d["pos"]), int(d["has_gauss"]),
                    float(d["cached_gaussian"])))
@@ -168,7 +168,7 @@ class _WarmMaskView:
         return self._store._warm[i].copy()
 
     def get(self, i, default=None):
-        i = int(i)
+        i = int(i)  # repro: allow[host-sync] -- host int client id, no device value
         return self._store._warm[i].copy() \
             if self._store._warm_valid[i] else default
 

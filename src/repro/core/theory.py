@@ -35,7 +35,7 @@ def global_gradient(model: Model, params: PyTree, client_batches: Sequence,
                     alpha: np.ndarray) -> PyTree:
     """∇f(θ) = Σ_i α_i ∇f_i(θ) (full-batch per client)."""
     total = None
-    g_fn = jax.jit(jax.grad(model.loss))
+    g_fn = jax.jit(jax.grad(model.loss))  # repro: allow[jit-outside-cache] -- offline theory utility (Assumption 2 estimates), not a hot path
     for a, batch in zip(alpha, client_batches):
         g = g_fn(params, batch)
         g = jax.tree.map(lambda x: a * x.astype(jnp.float32), g)
@@ -45,7 +45,7 @@ def global_gradient(model: Model, params: PyTree, client_batches: Sequence,
 
 def per_client_gradients(model: Model, params: PyTree,
                          client_batches: Sequence) -> list[PyTree]:
-    g_fn = jax.jit(jax.grad(model.loss))
+    g_fn = jax.jit(jax.grad(model.loss))  # repro: allow[jit-outside-cache] -- offline theory utility (Assumption 2 estimates), not a hot path
     return [g_fn(params, b) for b in client_batches]
 
 
@@ -108,7 +108,7 @@ def theorem_4_7_rhs(f0: float, f_star: float, *, eta: float, gamma: float,
 def sigma_per_layer(model: Model, params: PyTree, batches: Sequence,
                     full_batch) -> np.ndarray:
     """σ_l estimate: max over minibatches of ‖g_l(ξ) − ∇_l f‖."""
-    g_fn = jax.jit(jax.grad(model.loss))
+    g_fn = jax.jit(jax.grad(model.loss))  # repro: allow[jit-outside-cache] -- offline theory utility (Assumption 2 estimates), not a hot path
     g_full = g_fn(params, full_batch)
     worst = None
     for b in batches:

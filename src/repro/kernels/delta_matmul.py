@@ -35,7 +35,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _blocked(f: int, block_f) -> tuple[int, int, int]:
-    bf = f if block_f is None else min(int(block_f), f)
+    bf = f if block_f is None else min(int(block_f), f)  # repro: allow[host-sync] -- static block-shape arithmetic at trace time
     pad = (-f) % bf
     return bf, pad, (f + pad) // bf
 

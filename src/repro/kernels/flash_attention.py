@@ -128,3 +128,63 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         interpret=interpret,
     )(q.reshape(B * H, S, D), k.reshape(B * K, S, D), v.reshape(B * K, S, D))
     return out.reshape(B, H, S, D)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention_jnp(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 128):
+    """Pure-jnp fallback replaying the kernel's blocked streaming softmax.
+
+    Same block decomposition, same f32 accumulation, same masked-row
+    handling, with the kernel's sequential key-block axis as a
+    ``lax.scan`` — so the result is bit-identical to the Pallas kernel
+    (tests/test_kernels.py pins it), not merely allclose like the dense
+    oracle in ref.py.  This is what :func:`repro.kernels.ops.flash_attention`
+    dispatches to off-TPU (``mode="jnp"``)."""
+    B, H, S, D = q.shape
+    K = k.shape[1]
+    assert H % K == 0, (H, K)
+    group = H // K
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    nq, nk = S // block_q, S // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    qf = q.reshape(B * H, nq, block_q, D).astype(jnp.float32)
+    kf = jnp.repeat(k, group, axis=1).reshape(B * H, nk, block_k, D) \
+        .astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).reshape(B * H, nk, block_k, D) \
+        .astype(jnp.float32)
+    q_pos = (jnp.arange(nq, dtype=jnp.int32)[:, None] * block_q
+             + jnp.arange(block_q, dtype=jnp.int32)[None, :])   # (nq, bq)
+
+    def kblock(carry, inp):
+        m_prev, l_prev, acc = carry
+        kb, vb, ki = inp                       # (BH, bk, D) ×2, scalar
+        s = jax.lax.dot_general(
+            qf, kb, (((3,), (2,)), ((0,), (0,)))) * scale   # (BH,nq,bq,bk)
+        k_pos = ki * block_k + jnp.arange(block_k, dtype=jnp.int32)
+        ok = jnp.ones((nq, block_q, block_k), jnp.bool_)
+        if causal:
+            ok &= k_pos[None, None, :] <= q_pos[:, :, None]
+        if window:
+            ok &= (q_pos[:, :, None] - k_pos[None, None, :]) < window
+        s = jnp.where(ok[None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(ok[None], jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jax.lax.dot_general(
+            p, vb, (((3,), (1,)), ((0,), (0,))))
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((B * H, nq, block_q, 1), NEG_INF, jnp.float32),
+            jnp.zeros((B * H, nq, block_q, 1), jnp.float32),
+            jnp.zeros((B * H, nq, block_q, D), jnp.float32))
+    (m_f, l_f, acc_f), _ = jax.lax.scan(
+        kblock, init, (kf.transpose(1, 0, 2, 3), vf.transpose(1, 0, 2, 3),
+                       jnp.arange(nk, dtype=jnp.int32)))
+    denom = jnp.where(l_f > 0, l_f, 1.0)
+    return (acc_f / denom).astype(q.dtype).reshape(B, H, S, D)

@@ -47,14 +47,25 @@ def _resolve_mode(mode: Optional[str], interpret: Optional[bool]) -> str:
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: Optional[bool] = None):
-    """Model-layout wrapper: q (B,S,H,D), k/v (B,S,K,D) → (B,S,H,D)."""
+                    interpret: Optional[bool] = None,
+                    mode: Optional[str] = None):
+    """Model-layout wrapper: q (B,S,H,D), k/v (B,S,K,D) → (B,S,H,D).
+
+    The Pallas kernel on TPU, the bit-identical blocked jnp fallback
+    elsewhere (``mode`` forces either; tests/test_kernels.py pins the
+    parity)."""
+    m = _resolve_mode(mode, interpret)
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
-                              block_q=block_q, block_k=block_k,
-                              interpret=_auto_interpret(interpret))
+    if m == "jnp":
+        out = _fa.flash_attention_jnp(qt, kt, vt, causal=causal,
+                                      window=window, block_q=block_q,
+                                      block_k=block_k)
+    else:
+        out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=_auto_interpret(interpret))
     return out.transpose(0, 2, 1, 3)
 
 
@@ -63,7 +74,11 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 # ---------------------------------------------------------------------------
 
 def ssd(x, dt, A_log, Bmat, Cmat, D, *, chunk: int = 128,
-        interpret: Optional[bool] = None):
+        interpret: Optional[bool] = None, mode: Optional[str] = None):
+    """Model-layout SSD wrapper; the Pallas kernel on TPU, the
+    bit-identical chunked jnp fallback elsewhere (``mode`` forces
+    either)."""
+    m = _resolve_mode(mode, interpret)
     b, s, h, p = x.shape
     g, n = Bmat.shape[2], Bmat.shape[3]
     rep = h // g
@@ -75,8 +90,11 @@ def ssd(x, dt, A_log, Bmat, Cmat, D, *, chunk: int = 128,
     Bh = jnp.repeat(Bmat, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, n)
     Ch = jnp.repeat(Cmat, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, n)
     # kernel applies y += x*D with *undiscretised* x
-    y = _ssd.ssd_scan(xbh, dtbh, Abh, Bh, Ch, Dbh, chunk=chunk,
-                      interpret=_auto_interpret(interpret))
+    if m == "jnp":
+        y = _ssd.ssd_scan_jnp(xbh, dtbh, Abh, Bh, Ch, Dbh, chunk=chunk)
+    else:
+        y = _ssd.ssd_scan(xbh, dtbh, Abh, Bh, Ch, Dbh, chunk=chunk,
+                          interpret=_auto_interpret(interpret))
     return y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
 
 

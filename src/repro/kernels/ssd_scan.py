@@ -95,3 +95,56 @@ def ssd_scan(x, dt, A, Bmat, Cmat, D, *, chunk: int = 128,
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
         interpret=interpret,
     )(x, dt, A, Bmat, Cmat, D)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan_jnp(x, dt, A, Bmat, Cmat, D, *, chunk: int = 128):
+    """Pure-jnp fallback replaying the kernel's chunked semiseparable form.
+
+    Same chunk decomposition, same intra-chunk L-masked matmuls, same
+    carried (P, N) state recurrence (the kernel's sequential chunk axis as
+    a ``lax.scan``) — bit-identical to the Pallas kernel
+    (tests/test_kernels.py pins it), unlike the token-sequential oracle in
+    ref.py which is only allclose.  This is what
+    :func:`repro.kernels.ops.ssd` dispatches to off-TPU (``mode="jnp"``)."""
+    BH, S, P = x.shape
+    N = Bmat.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    xf = x.astype(jnp.float32).reshape(BH, nc, chunk, P).transpose(1, 0, 2, 3)
+    dtf = dt.astype(jnp.float32).reshape(BH, nc, chunk).transpose(1, 0, 2)
+    Af = A.astype(jnp.float32)
+    Bf = Bmat.astype(jnp.float32).reshape(BH, nc, chunk, N) \
+        .transpose(1, 0, 2, 3)
+    Cf = Cmat.astype(jnp.float32).reshape(BH, nc, chunk, N) \
+        .transpose(1, 0, 2, 3)
+    Df = D.astype(jnp.float32)
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+
+    def step(state, inp):                      # state: (BH, P, N)
+        xc, dtc, bc, cc = inp                  # (BH,chunk,P),(BH,chunk),(BH,chunk,N)×2
+        dA = dtc * Af[:, None]
+        dAcs = jnp.cumsum(dA, axis=-1)
+        xdt = xc * dtc[..., None]
+        seg = dAcs[:, :, None] - dAcs[:, None, :]
+        L = jnp.where(ii[None] >= jj[None], jnp.exp(seg), 0.0)
+        scores = jax.lax.dot_general(
+            cc, bc, (((2,), (2,)), ((0,), (0,))))          # (BH,chunk,chunk)
+        y = jax.lax.dot_general(
+            scores * L, xdt, (((2,), (1,)), ((0,), (0,))))  # (BH,chunk,P)
+        decay_out = jnp.exp(dAcs)[..., None]
+        y = y + jax.lax.dot_general(
+            cc, state, (((2,), (2,)), ((0,), (0,)))) * decay_out
+        decay_states = jnp.exp(dAcs[:, -1][:, None] - dAcs)[..., None]
+        new_state = (state * jnp.exp(dAcs[:, -1])[:, None, None]
+                     + jax.lax.dot_general(xdt * decay_states, bc,
+                                           (((1,), (1,)), ((0,), (0,)))))
+        return new_state, y + xc * Df[:, None, None]
+
+    state0 = jnp.zeros((BH, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, (xf, dtf, Bf, Cf))
+    return ys.transpose(1, 0, 2, 3).reshape(BH, S, P).astype(x.dtype)

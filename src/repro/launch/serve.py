@@ -130,7 +130,7 @@ class SlotServer:
         queue = list(requests)
         done: list[Request] = []
         steps = 0
-        t0 = time.time()
+        t0 = time.time()  # repro: allow[nondeterminism] -- serve wall-clock telemetry only
         while queue or any(r is not None for r in self.active):
             self._admit(queue)
             if queue and all(r is None for r in self.active):
@@ -142,13 +142,14 @@ class SlotServer:
             for i, r in enumerate(self.active):
                 if r is None:
                     continue
-                p = int(self.pos[i])
+                p = int(self.pos[i])  # repro: allow[host-sync] -- self.pos is the host np position mirror, no device value
                 toks[i] = (r.prompt[p] if p < len(r.prompt)
                            else r.generated[-1])
             # per-slot position vector: each slot decodes at its own stream
             # position; empty slots idle at 0 and are masked on refill
             logits, self.cache = self._decode(jnp.asarray(toks),
                                               jnp.asarray(self.pos))
+            # repro: allow[host-sync] -- the serve loop's one sanctioned sync: greedy feedback, next token depends on this step's logits
             nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
             steps += 1
             for i, r in enumerate(self.active):
@@ -156,14 +157,14 @@ class SlotServer:
                     continue
                 self.pos[i] += 1
                 if self.pos[i] >= len(r.prompt):
-                    r.generated.append(int(nxt[i]))
+                    r.generated.append(int(nxt[i]))  # repro: allow[host-sync] -- nxt already materialised at the sanctioned sync above
                 if r.done or self.pos[i] >= self.max_seq - 1:
                     done.append(r)
                     self._free(i)
             if verbose and steps % 8 == 0:
                 print(f"  step {steps}: {sum(x is not None for x in self.active)}"
                       f" active, {len(queue)} queued, {len(done)} done")
-        dt = time.time() - t0
+        dt = time.time() - t0  # repro: allow[nondeterminism] -- serve wall-clock telemetry only
         gen = sum(len(r.generated) for r in done)
         return done, {"steps": steps, "wall_s": dt, "gen_tokens": gen,
                       "tok_per_s": gen / dt if dt > 1e-9 else 0.0}

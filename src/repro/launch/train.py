@@ -86,7 +86,7 @@ def main():
                  if k in strategy.probe_requirements)
 
     for t in range(args.rounds):
-        t0 = time.time()
+        t0 = time.time()  # repro: allow[nondeterminism] -- round wall-clock telemetry only
         host_params = jax.device_get(params)
         if reqs:
             rows = [probe_client.probe(host_params, data.client_batch(i, 4),
@@ -107,7 +107,7 @@ def main():
                                   jnp.float32(args.lr))
         print(f"[round {t:3d}] loss={float(metrics['loss']):.4f} "
               f"union={float(metrics['union_frac']):.2f} "
-              f"({time.time() - t0:.2f}s)")
+              f"({time.time() - t0:.2f}s)")  # repro: allow[nondeterminism] -- round wall-clock telemetry only
 
 
 if __name__ == "__main__":

@@ -557,8 +557,10 @@ class Model:
         return x
 
     def _whisper_seq(self, params, batch, window, hook=lambda p, i, s: p,
-                     trainable: Optional[PyTree] = None, cuts: dict = {}):
+                     trainable: Optional[PyTree] = None,
+                     cuts: Optional[dict] = None):
         cfg, rt = self.cfg, self.runtime
+        cuts = cuts if cuts is not None else {}
         frames = batch["frames"].astype(params["embed"]["frame_proj"].dtype)
         e = frames @ params["embed"]["frame_proj"]
         Se = e.shape[1]

@@ -52,7 +52,7 @@ def moe_param_shapes(cfg: ArchConfig) -> dict:
 
 
 def capacity(n_tokens: int, cfg: ArchConfig) -> int:
-    c = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    c = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))  # repro: allow[host-sync] -- python scalar arithmetic on static token counts
     return max(c, cfg.top_k)
 
 

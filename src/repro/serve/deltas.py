@@ -123,7 +123,7 @@ class DeltaStore:
         return rec
 
     def get(self, user_id: int) -> Optional[DeltaRecord]:
-        return self._records.get(int(user_id))
+        return self._records.get(int(user_id))  # repro: allow[host-sync] -- host int user id, no device value
 
     def users(self) -> list[int]:
         return sorted(self._records)
@@ -144,7 +144,7 @@ class DeltaStore:
         This is what dense per-user serving has to build per request — and
         the oracle the batched delta path is tested against.
         """
-        rec = self._records.get(int(user_id))
+        rec = self._records.get(int(user_id))  # repro: allow[host-sync] -- host int user id, no device value
         if rec is None:
             return params
         return apply_delta_rows(params, rec.rows(), rec.leaves())

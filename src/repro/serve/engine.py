@@ -78,14 +78,15 @@ class DeltaOverlay:
         rows_idx, leaves = record.segments["blocks"]
         plan = []
         taken: dict[int, int] = {}
+        # repro: allow[host-sync] -- admission control runs at delta-publish time on the host row index, not per decode step
         for l in np.asarray(rows_idx, np.int32):
-            li = int(l)
+            li = int(l)  # repro: allow[host-sync] -- host np row index (admission time)
             free = np.nonzero(self.slot_ids[li] < 0)[0]
             free = free[taken.get(li, 0):]
             if free.size == 0:
                 return False
             taken[li] = taken.get(li, 0) + 1
-            plan.append((li, int(free[0])))
+            plan.append((li, int(free[0])))  # repro: allow[host-sync] -- host np slot bookkeeping (admission time)
         ent = []
         for j, (li, c) in enumerate(plan):
             rows = {name: jnp.asarray(leaves[name][j]) for name in self.leaves}

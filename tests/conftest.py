@@ -20,6 +20,25 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture
+def strict_mode():
+    """Opt-in strict-mode context factory (REPRO_STRICT=1 in CI smoke).
+
+    Yields a callable: ``with strict_mode("label"): ...`` arms
+    ``jax.transfer_guard("disallow")`` plus the jit-suite retrace sentinel
+    for the block — implicit host↔device transfers and new compiled
+    programs both raise.  When REPRO_STRICT is unset the context is a
+    no-op, so tests using it stay cheap by default and become tripwires
+    under the strict CI job.
+    """
+    from repro.analysis.strict import strict_enabled, strict_region
+
+    def region(label="strict-region", force: bool = False):
+        return strict_region(label, enabled=force or strict_enabled())
+
+    return region
+
+
 def make_batch(cfg, B, S, key=None):
     """Synthetic batch matching an arch's input contract."""
     import jax.numpy as jnp

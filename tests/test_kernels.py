@@ -131,6 +131,70 @@ def test_masked_update_jnp_fallback_bit_identical(L, F, dtype):
                                   np.asarray(fallback, np.float32))
 
 
+@pytest.mark.parametrize("B,H,K,S,D,causal,window,dtype", ATTN_CASES)
+def test_flash_attention_jnp_fallback_bit_identical(B, H, K, S, D, causal,
+                                                    window, dtype):
+    """The fallback replays the kernel's blocked streaming softmax (same
+    block shapes, same f32 running max/normaliser), so kernel (interpret)
+    and fallback agree bit-for-bit — not just allclose like the dense
+    ref.py oracle."""
+    from repro.kernels.flash_attention import flash_attention_jnp
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, K, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, K, S, D), dtype)
+    kernel = fa_raw(q, k, v, causal=causal, window=window, block_q=64,
+                    block_k=64, interpret=True)
+    fallback = flash_attention_jnp(q, k, v, causal=causal, window=window,
+                                   block_q=64, block_k=64)
+    np.testing.assert_array_equal(np.asarray(kernel, np.float32),
+                                  np.asarray(fallback, np.float32))
+
+
+@pytest.mark.parametrize("BH,S,P,N,chunk,dtype", SSD_CASES)
+def test_ssd_scan_jnp_fallback_bit_identical(BH, S, P, N, chunk, dtype):
+    """The fallback replays the kernel's chunked semiseparable scan (same
+    chunking, same carried (P,N) f32 state), so kernel (interpret) and
+    fallback agree bit-for-bit."""
+    from repro.kernels.ssd_scan import ssd_scan_jnp
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (BH, S, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (BH, S))).astype(dtype)
+    A = -jnp.exp(jax.random.uniform(ks[2], (BH,), minval=-1.0, maxval=0.5))
+    Bm = (jax.random.normal(ks[3], (BH, S, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (BH, S, N)) * 0.5).astype(dtype)
+    D = jnp.ones((BH,))
+    kernel = ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
+    fallback = ssd_scan_jnp(x, dt, A, Bm, Cm, D, chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(kernel, np.float32),
+                                  np.asarray(fallback, np.float32))
+
+
+def test_ops_attention_ssd_mode_dispatch():
+    """The ops-layer wrappers route mode='jnp' to the fallbacks and
+    mode='pallas' to the kernels; both paths agree on model-layout
+    inputs (GQA attention + grouped SSD)."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 8)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    a_p = ops.flash_attention(q, k, v, window=32, interpret=True,
+                              mode="pallas")
+    a_j = ops.flash_attention(q, k, v, window=32, mode="jnp")
+    np.testing.assert_array_equal(np.asarray(a_p), np.asarray(a_j))
+
+    x = jax.random.normal(ks[3], (2, 64, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (2, 64, 4)))
+    A_log = jax.random.uniform(ks[5], (4,), minval=-1.0, maxval=1.0)
+    Bm = jax.random.normal(ks[6], (2, 64, 2, 16)) * 0.5
+    Cm = jax.random.normal(ks[7], (2, 64, 2, 16)) * 0.5
+    D = jnp.ones((4,))
+    s_p = ops.ssd(x, dt, A_log, Bm, Cm, D, chunk=32, interpret=True,
+                  mode="pallas")
+    s_j = ops.ssd(x, dt, A_log, Bm, Cm, D, chunk=32, mode="jnp")
+    np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_j))
+
+
 DELTA_MM_CASES = [
     # (B, d, f, C, block_f, dtype)
     (4, 64, 128, 2, None, jnp.float32),

@@ -1,0 +1,81 @@
+"""Strict-mode tripwires over the streaming round loop (REPRO_STRICT).
+
+The static linter (repro.analysis) proves the *code* has no unsanctioned
+sync/jit sites; these tests prove the *execution*: with the jit suite
+warmed, steady-state rounds run under ``jax.transfer_guard("disallow")``
+(zero implicit host↔device transfers — every batch, mask and scalar is
+explicitly device_put) and under the jit-suite retrace sentinel (zero new
+compiled programs — the pins in test_jit_cache.py backed by a trace-count
+assertion, per ISSUE 8).
+
+The strict region is always forced here; the conftest ``strict_mode``
+fixture arms only under REPRO_STRICT=1 so ordinary tests can opt in
+cheaply (the CI smoke job sets it).
+"""
+import jax
+import pytest
+
+from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
+from repro.core import client as client_mod
+from repro.core.server import FLServer
+from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
+from repro.models.model import Model
+
+
+def _world():
+    cfg = reduced(get_arch("xlm_roberta_base"), n_layers=2, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    task = FederatedTaskConfig(n_clients=8, n_classes=10,
+                               vocab_size=cfg.vocab_size, seq_len=8,
+                               samples_per_client=16, skew="label",
+                               objective="classification")
+    fl = FLConfig(n_clients=8, cohort_size=3, rounds=4, local_steps=2,
+                  lr=0.01, batch_size=4, strategy="ours", budget=1, lam=1.0,
+                  seed=0)
+    return model, model.init(jax.random.PRNGKey(0)), task, fl
+
+
+@pytest.mark.parametrize("depth", [1, 4])
+def test_round_loop_strict_no_transfers_no_retraces(strict_mode, depth):
+    """An identically-configured warmup run compiles every program variant
+    (incl. per-cut masked programs — same seeds ⇒ same cut sequence);
+    the second run must then replay cached traces end to end with only
+    explicit transfers, at pipeline depth 1 and 4."""
+    model, params, task, fl = _world()
+    client_mod.clear_jit_cache()
+
+    warm = FLServer(model, fl, SyntheticFederatedData(task),
+                    pipeline_depth=depth)
+    _, h_warm = warm.run(params)
+
+    srv = FLServer(model, fl, SyntheticFederatedData(task),
+                   pipeline_depth=depth)
+    with strict_mode(f"round loop depth={depth}", force=True):
+        _, h_strict = srv.run(params)
+
+    # strictness must not have changed the math
+    assert h_warm.summary() == h_strict.summary()
+
+
+def test_strict_region_trips_on_implicit_transfer(strict_mode):
+    """The guard actually guards: an np array smuggled into a jitted
+    program raises inside the region and passes outside it."""
+    import numpy as np
+
+    f = jax.jit(lambda x: x + 1)
+    f(np.ones(4))                        # warm + legal outside the region
+    with pytest.raises(Exception, match="[Tt]ransfer"):
+        with strict_mode("tripwire", force=True):
+            f(np.ones(4)).block_until_ready()
+
+
+def test_retrace_sentinel_trips_on_new_program():
+    """A fresh suite entry compiled inside the region is reported as a
+    retrace, with the grown entry point named."""
+    from repro.analysis.strict import RetraceSentinel
+
+    model, params, task, fl = _world()
+    client_mod.clear_jit_cache()
+    with pytest.raises(AssertionError, match="retrace inside cold run"):
+        with RetraceSentinel("cold run"):
+            FLServer(model, fl, SyntheticFederatedData(task)).run(params)
