@@ -24,8 +24,12 @@ depth-1 double buffer (paired per-rep ratios), and the population-state
 store's per-round host cost must stay flat when the population grows
 10x (O(cohort) gather/scatter, DESIGN.md §8), and the personalized-delta
 serving decode must not be slower than the dense per-user-params baseline
-at any swept (slots, density) (DESIGN.md §9).  Exits non-zero on a
-budget violation.
+at any swept (slots, density) (DESIGN.md §9).  The static program audit
+(DESIGN.md §11) gates here too: every jit-suite program family is lowered
+on abstract inputs, the compiled-program contracts checked, and the
+committed ``experiments/bench/PROGRAM_BUDGETS.json`` diffed — a cost
+regression fails deterministically with zero timing noise.  Exits
+non-zero on a budget violation.
 """
 from __future__ import annotations
 
@@ -137,6 +141,32 @@ def main() -> None:
                 f" paired ratio {row['paired_ratio']:.2f} > 1.10 vs dense "
                 f"per-user params")
 
+    # static program budgets (DESIGN.md §11): zero timing noise — the
+    # auditor lowers every jit-suite program family on abstract inputs,
+    # checks the program-level contracts (cut-monotone FLOPs,
+    # B-independent delta weight traffic, donation honored, dtype
+    # discipline, collective/transfer allowlist) and diffs the committed
+    # PROGRAM_BUDGETS.json with per-metric tolerances
+    from repro.analysis import contracts as program_contracts
+    from repro.analysis import program as program_audit
+    facts = program_audit.run_audit()
+    violations = program_contracts.check_all(facts)
+    budget_failures = []
+    manifest = program_audit.load_budgets()
+    if manifest is None:
+        failures.append(
+            "program_audit: experiments/bench/PROGRAM_BUDGETS.json missing "
+            "— run `python -m repro.analysis program --update-budgets` and "
+            "commit it")
+    else:
+        budget_failures = program_audit.check_budgets(facts, manifest)
+    save_result("BENCH_program_audit",
+                program_audit.audit_report(facts, violations,
+                                           budget_failures))
+    failures += [f"program_audit[{v.contract}] {v.program}: {v.message}"
+                 for v in violations]
+    failures += [f"program_audit[budget] {m}" for m in budget_failures]
+
     print(f"full_round speedup over pre-pipeline path: "
           f"{full['speedup']:.2f}x")
     print("masked_backward speedups vs dense: "
@@ -160,7 +190,8 @@ def main() -> None:
           "(vectorized <= sequential, masked <= dense at every cut and "
           ">=1.5x at the deepest, trimmed probe <= all-stats, "
           "depth-k <= depth-1, population-state cost flat in n, "
-          "delta serving <= dense per-user params at every density)")
+          "delta serving <= dense per-user params at every density, "
+          f"{len(facts)} programs statically audited: contracts + budgets)")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,20 @@
-"""CLI: ``python -m repro.analysis [paths...] [--rule NAME ...]``.
+"""CLI: source linting and the program auditor.
 
-Prints ``file:line rule message`` per finding and exits 1 if any exist.
-Default paths are the repo's linted tree: ``src benchmarks examples``.
+    python -m repro.analysis [lint] [paths...] [--rule NAME ...] [--json]
+    python -m repro.analysis program [--json] [--update-budgets]
+
+``lint`` (the default, stdlib-only — the CI lint job runs it without jax)
+prints ``file:line rule message`` per finding and exits 1 if any exist.
+``program`` lowers every jit-suite program family on abstract inputs,
+checks the DESIGN.md §11 contracts, and diffs the committed
+``experiments/bench/PROGRAM_BUDGETS.json``; it needs jax (CPU is fine).
+``--json`` emits a machine-readable report on stdout for either mode —
+the CI jobs turn it into per-line GitHub annotations.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -14,10 +23,10 @@ from repro.analysis.engine import RULES, _ensure_rules_loaded, run_paths
 DEFAULT_PATHS = ("src", "benchmarks", "examples")
 
 
-def main(argv=None) -> int:
+def lint_main(argv) -> int:
     _ensure_rules_loaded()
     ap = argparse.ArgumentParser(
-        prog="python -m repro.analysis",
+        prog="python -m repro.analysis [lint]",
         description="Static invariant linter (DESIGN.md §10).")
     ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
                     help="files or directories (default: %(default)s)")
@@ -27,6 +36,8 @@ def main(argv=None) -> int:
                     help="repo root for relative paths (default: cwd)")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the registered rules and exit")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings on stdout")
     args = ap.parse_args(argv)
 
     if args.list_rules:
@@ -35,12 +46,87 @@ def main(argv=None) -> int:
         return 0
 
     findings = run_paths(args.paths, repo_root=args.root, only=args.rules)
+    if args.json:
+        print(json.dumps({
+            "findings": [{"path": f.path, "line": f.line, "rule": f.rule,
+                          "message": f.message} for f in findings],
+            "ok": not findings,
+        }, indent=1))
+        return 1 if findings else 0
     for f in findings:
         print(f.format())
     if findings:
         print(f"{len(findings)} finding(s) across "
               f"{len({f.path for f in findings})} file(s)", file=sys.stderr)
     return 1 if findings else 0
+
+
+def program_main(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis program",
+        description="Program auditor: jaxpr/HLO contract checks + static "
+                    "cost budgets (DESIGN.md §11).")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable report on stdout")
+    ap.add_argument("--update-budgets", action="store_true",
+                    help="refresh the budget manifest from this audit "
+                         "instead of diffing against it")
+    ap.add_argument("--budgets", default=None, metavar="PATH",
+                    help="budget manifest path (default: "
+                         "experiments/bench/PROGRAM_BUDGETS.json)")
+    args = ap.parse_args(argv)
+
+    # jax only loads for the auditor — `lint` stays importable anywhere
+    from repro.analysis import contracts as C
+    from repro.analysis import program as P
+
+    path = args.budgets or P.DEFAULT_BUDGETS_PATH
+    progress = (None if args.json else
+                (lambda n: print(f"  lowering {n}", file=sys.stderr)))
+    facts = P.run_audit(progress=progress)
+    violations = C.check_all(facts)
+
+    budget_failures: list[str] = []
+    if args.update_budgets:
+        P.save_budgets(facts, path)
+        print(f"wrote {len(facts)} program budgets to {path}",
+              file=sys.stderr)
+    else:
+        manifest = P.load_budgets(path)
+        if manifest is None:
+            print(f"note: no budget manifest at {path} "
+                  f"(run --update-budgets to create it); "
+                  f"checking contracts only", file=sys.stderr)
+        else:
+            budget_failures = P.check_budgets(facts, manifest)
+
+    if args.json:
+        print(json.dumps(P.audit_report(facts, violations, budget_failures),
+                         indent=1))
+        return 1 if (violations or budget_failures) else 0
+
+    for name, f in sorted(facts.items()):
+        print(f"{name:44s} flops={f.flops:12.4g} hbm={f.hbm_bytes:12.4g} "
+              f"weight={f.weight_bytes:10.4g} "
+              f"donate={f.donation_applied}/{f.donated_declared}")
+    for v in violations:
+        print(f"CONTRACT {v.contract} :: {v.program}: {v.message}")
+    for msg in budget_failures:
+        print(f"BUDGET {msg}")
+    n_bad = len(violations) + len(budget_failures)
+    print(f"{len(facts)} programs audited, {len(violations)} contract "
+          f"violation(s), {len(budget_failures)} budget failure(s)",
+          file=sys.stderr)
+    return 1 if n_bad else 0
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "program":
+        return program_main(argv[1:])
+    if argv and argv[0] == "lint":
+        argv = argv[1:]
+    return lint_main(argv)
 
 
 if __name__ == "__main__":

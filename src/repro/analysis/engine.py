@@ -123,6 +123,15 @@ class AnalysisConfig:
     kernel_exclude: tuple[str, ...] = ("ops.py", "ref.py", "__init__.py")
     kernel_tests: str = "tests/test_kernels.py"
     kernel_dispatch: str = "src/repro/kernels/ops.py"
+    # donation-miss: where jit calls over params-sized trees must either
+    # donate or carry a reasoned pragma, and the parameter names that mark
+    # a params-sized tree argument
+    donation_scope: tuple[str, ...] = (
+        "src/repro/serve/", "src/repro/core/",
+    )
+    donation_tree_params: tuple[str, ...] = (
+        "params", "stacked", "leaves", "cache", "bank", "state", "tree",
+    )
 
 
 class Context:

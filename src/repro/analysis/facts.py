@@ -1,0 +1,300 @@
+"""Per-program fact extraction for the program auditor (DESIGN.md §11).
+
+Given a jitted callable and shape-only abstract inputs, this module lowers
+the program ONCE and reads two complementary views:
+
+* the **jaxpr** (``fn.trace(...)``) — semantic structure before XLA gets
+  creative: a weight-provenance walk tags every input leaf declared a
+  *weight* and follows the tags through layout/cast primitives into
+  ``dot_general`` operands, yielding ``weight_bytes`` — the bytes of
+  weight operands streamed into matmuls, with ``scan`` bodies multiplied
+  by their trip count.  This is the quantity the delta-serving contract
+  pins: ``serve_decode_delta`` reads (1+C)·d·f per layer regardless of
+  batch B, while the dense baseline reads B·d·f.  The walk also records a
+  dtype census of every aval it sees (the f64 tripwire fires here even
+  when XLA would fold the offending cast away).
+
+* the **compiled HLO** (``.lower().compile().as_text()``) — what actually
+  runs: scan-unrolled FLOPs/HBM bytes and collective traffic via
+  :mod:`repro.analysis.costmodel`, transfer/outfeed ops, the donation
+  aliases XLA *applied* (vs. merely requested), an HLO-side dtype census,
+  and ``memory_analysis()`` sizes.
+
+Provenance semantics: a value is weight-tagged iff it is reachable from a
+weight input leaf through pure layout/cast primitives
+(transpose/reshape/slice/convert/...).  Outputs of ``dot_general`` and of
+arithmetic are *activations* — mixing ends the tag.  ``scan`` maps tags
+through consts/carry/xs onto the body (an xs slice of a tagged stack stays
+tagged) and multiplies body traffic by ``length``; ``pjit``/``remat2``/
+custom-derivative calls and ``cond`` branches are descended with the
+multiplier unchanged (``cond`` contributes the max across branches).
+``while`` bodies are counted once — the repo's loops are scans, which keep
+their trip count at jaxpr level.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+
+from repro.analysis import costmodel as CM
+
+# -- jaxpr weight-provenance walk -------------------------------------------
+
+# Primitives that preserve "this value IS (a view/cast of) weights".
+_LAYOUT_PRIMS = frozenset({
+    "convert_element_type", "transpose", "reshape", "broadcast_in_dim",
+    "slice", "dynamic_slice", "dynamic_update_slice", "squeeze",
+    "expand_dims", "rev", "concatenate", "pad", "gather", "copy",
+    "device_put", "select_n", "stop_gradient",
+})
+
+# Call-like primitives whose inner jaxpr's invars map 1:1 onto eqn.invars.
+_CALL_PRIM_JAXPR_KEYS = {
+    "pjit": ("jaxpr",),
+    "closed_call": ("call_jaxpr", "jaxpr"),
+    "core_call": ("call_jaxpr",),
+    "remat2": ("jaxpr",),
+    "remat": ("jaxpr",),
+    "checkpoint": ("jaxpr",),
+    "custom_jvp_call": ("call_jaxpr", "fun_jaxpr"),
+    "custom_vjp_call": ("call_jaxpr", "fun_jaxpr"),
+    "custom_jvp_call_jaxpr": ("fun_jaxpr",),
+    "custom_vjp_call_jaxpr": ("fun_jaxpr",),
+}
+
+# Matmul-class primitives whose weight-tagged operands count as streamed
+# weight traffic.
+_MATMUL_PRIMS = frozenset({"dot_general", "conv_general_dilated"})
+
+
+def _is_literal(atom) -> bool:
+    return hasattr(atom, "val")          # core.Literal ducks; Var does not
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(aval.size) * int(aval.dtype.itemsize)
+    except (AttributeError, TypeError):
+        return 0                          # tokens / dtype-less avals
+
+
+def _aval_dtype(atom) -> str | None:
+    aval = getattr(atom, "aval", atom)
+    dt = getattr(aval, "dtype", None)
+    return None if dt is None else str(dt)
+
+
+def _unwrap(maybe_closed):
+    """ClosedJaxpr → Jaxpr; Jaxpr passes through."""
+    return getattr(maybe_closed, "jaxpr", maybe_closed)
+
+
+class JaxprWalk:
+    """Accumulates weight traffic + a dtype census over one closed jaxpr."""
+
+    def __init__(self):
+        self.weight_bytes = 0.0
+        self.dtypes: set[str] = set()
+
+    def _note(self, atoms: Iterable[Any]):
+        for a in atoms:
+            dt = _aval_dtype(a)
+            if dt is not None:
+                self.dtypes.add(dt)
+
+    def walk(self, jaxpr, tags: dict, mult: float) -> list[bool]:
+        """Walk one (open) jaxpr; returns the tag per outvar."""
+        self._note(jaxpr.invars)
+        self._note(jaxpr.constvars)
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            in_tags = [(not _is_literal(a)) and tags.get(a, False)
+                       for a in eqn.invars]
+            self._note(eqn.invars)
+            self._note(eqn.outvars)
+            if prim in _MATMUL_PRIMS:
+                for a, t in zip(eqn.invars, in_tags):
+                    if t:
+                        self.weight_bytes += mult * _aval_bytes(a.aval)
+                out_tags = [False] * len(eqn.outvars)
+            elif prim == "scan":
+                inner = _unwrap(eqn.params["jaxpr"])
+                length = int(eqn.params.get("length", 1))
+                sub = dict(zip(inner.invars, in_tags))
+                out_tags = self.walk(inner, sub, mult * length)
+            elif prim in _CALL_PRIM_JAXPR_KEYS:
+                inner = None
+                for k in _CALL_PRIM_JAXPR_KEYS[prim]:
+                    if eqn.params.get(k) is not None:
+                        inner = _unwrap(eqn.params[k])
+                        break
+                if inner is None:
+                    out_tags = [False] * len(eqn.outvars)
+                else:
+                    sub = dict(zip(inner.invars, in_tags))
+                    out_tags = self.walk(inner, sub, mult)
+            elif prim == "cond":
+                # invars = (index, *operands); contribute the costliest branch
+                best, best_tags = -1.0, [False] * len(eqn.outvars)
+                for br in eqn.params["branches"]:
+                    inner = _unwrap(br)
+                    probe = JaxprWalk()
+                    sub = dict(zip(inner.invars, in_tags[1:]))
+                    btags = probe.walk(inner, sub, mult)
+                    self.dtypes |= probe.dtypes
+                    if probe.weight_bytes > best:
+                        best, best_tags = probe.weight_bytes, btags
+                self.weight_bytes += max(best, 0.0)
+                out_tags = best_tags
+            elif prim == "while":
+                # trip count is dynamic at jaxpr level: count the body once
+                body = _unwrap(eqn.params["body_jaxpr"])
+                cn = int(eqn.params.get("cond_nconsts", 0))
+                sub = dict(zip(body.invars, in_tags[cn:]))
+                out_tags = self.walk(body, sub, mult)
+            elif prim in _LAYOUT_PRIMS:
+                out_tags = [any(in_tags)] * len(eqn.outvars)
+            else:
+                out_tags = [False] * len(eqn.outvars)
+            for v, t in zip(eqn.outvars, out_tags):
+                tags[v] = t
+        return [(not _is_literal(v)) and tags.get(v, False)
+                for v in jaxpr.outvars]
+
+
+def weight_traffic(closed_jaxpr, invar_tags: Sequence[bool]
+                   ) -> tuple[float, set[str]]:
+    """(weight bytes streamed into matmuls, dtype census) of a jaxpr."""
+    jaxpr = _unwrap(closed_jaxpr)
+    if len(invar_tags) != len(jaxpr.invars):
+        raise ValueError(
+            f"invar tag count {len(invar_tags)} != jaxpr invars "
+            f"{len(jaxpr.invars)} — static_argnums/weight_argnums mismatch")
+    w = JaxprWalk()
+    w.walk(jaxpr, dict(zip(jaxpr.invars, invar_tags)), 1.0)
+    return w.weight_bytes, w.dtypes
+
+
+# -- the fact table row ------------------------------------------------------
+
+@dataclass
+class ProgramFacts:
+    """Everything the contract layer and the budget gate read, one program."""
+    name: str
+    meta: dict = field(default_factory=dict)
+    # compiled-HLO side (scan-unrolled, repro.analysis.costmodel)
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = field(default_factory=dict)
+    collective_counts: dict = field(default_factory=dict)
+    transfer_ops: dict = field(default_factory=dict)
+    hlo_dtypes: dict = field(default_factory=dict)
+    donation_applied: int = 0
+    # jaxpr side
+    weight_bytes: float = 0.0
+    jaxpr_dtypes: list = field(default_factory=list)
+    out_dtypes: list = field(default_factory=list)
+    donated_declared: int = 0
+    # memory
+    arg_bytes: int = 0
+    out_bytes: int = 0
+    temp_bytes: int = 0
+    code_bytes: int = 0
+    param_bytes: int = 0        # bytes of the weight-tagged abstract inputs
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name, "meta": dict(self.meta),
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_kind": dict(self.collective_by_kind),
+            "collective_counts": dict(self.collective_counts),
+            "transfer_ops": dict(self.transfer_ops),
+            "hlo_dtypes": dict(self.hlo_dtypes),
+            "donation_applied": self.donation_applied,
+            "weight_bytes": self.weight_bytes,
+            "jaxpr_dtypes": sorted(self.jaxpr_dtypes),
+            "out_dtypes": list(self.out_dtypes),
+            "donated_declared": self.donated_declared,
+            "arg_bytes": self.arg_bytes, "out_bytes": self.out_bytes,
+            "temp_bytes": self.temp_bytes, "code_bytes": self.code_bytes,
+            "param_bytes": self.param_bytes,
+        }
+
+
+def _n_leaves(tree) -> int:
+    return len(jax.tree_util.tree_leaves(tree))
+
+
+def extract_facts(name: str, fn: Callable, args: Sequence[Any], *,
+                  static_argnums: Sequence[int] = (),
+                  donate_argnums: Sequence[int] = (),
+                  weight_argnums: Sequence[int] = (),
+                  meta: dict | None = None) -> ProgramFacts:
+    """Lower ``fn(*args)`` once and extract the full fact row.
+
+    ``fn`` is a jitted callable (its own static/donate setup governs the
+    lowering); the ``*_argnums`` here describe the *positional* ``args``
+    for bookkeeping: which are compile-time static (excluded from the
+    jaxpr's invars), which the suite declares donated (expected-alias
+    count), and which hold weights (provenance roots).  Abstract
+    (``ShapeDtypeStruct``) args are fine — nothing executes.
+    """
+    static = set(static_argnums)
+    donate = set(donate_argnums)
+    weights = set(weight_argnums)
+
+    traced = fn.trace(*args)
+    closed = traced.jaxpr
+
+    invar_tags: list[bool] = []
+    donated_declared = 0
+    param_bytes = 0
+    for i, a in enumerate(args):
+        if i in static:
+            continue
+        n = _n_leaves(a)
+        tag = i in weights
+        invar_tags.extend([tag] * n)
+        if tag:
+            param_bytes += sum(
+                _aval_bytes(l) for l in jax.tree_util.tree_leaves(a))
+        if i in donate:
+            donated_declared += n
+    wbytes, jdtypes = weight_traffic(closed, invar_tags)
+
+    compiled = traced.lower().compile()
+    hlo = compiled.as_text()
+    summary = CM.unrolled_summary(hlo)
+
+    mem = {"arg": 0, "out": 0, "temp": 0, "code": 0}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {"arg": int(ma.argument_size_in_bytes),
+                   "out": int(ma.output_size_in_bytes),
+                   "temp": int(ma.temp_size_in_bytes),
+                   "code": int(ma.generated_code_size_in_bytes)}
+    except Exception:       # backend without memory stats: facts stay zero
+        pass
+
+    return ProgramFacts(
+        name=name, meta=dict(meta or {}),
+        flops=summary["flops"], hbm_bytes=summary["hbm_bytes"],
+        collective_bytes=summary["collective_bytes"],
+        collective_by_kind=summary["collective_by_kind"],
+        collective_counts=summary["collective_counts"],
+        transfer_ops=summary["transfer_ops"],
+        hlo_dtypes=summary["dtypes"],
+        donation_applied=len(summary["donation_aliases"]),
+        weight_bytes=wbytes,
+        jaxpr_dtypes=sorted(jdtypes),
+        out_dtypes=[str(getattr(a, "dtype", a)) for a in closed.out_avals],
+        donated_declared=donated_declared,
+        arg_bytes=mem["arg"], out_bytes=mem["out"],
+        temp_bytes=mem["temp"], code_bytes=mem["code"],
+        param_bytes=param_bytes,
+    )

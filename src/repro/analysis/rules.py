@@ -410,3 +410,71 @@ def kernel_parity(sf: SourceFile, ctx: Context):
                     f"fallback {fb}() is never exercised by "
                     f"{cfg.kernel_tests} — kernel/fallback parity is "
                     f"unpinned")
+
+
+# ---------------------------------------------------------------------------
+# Rule: donation-miss  (contract from PR 7's donated serve writes, audited
+# program-side by repro.analysis.program's donation-honored contract)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_jit_target(call: ast.Call, sf: SourceFile):
+    """File-local FunctionDef/Lambda the jit call wraps, or None.
+
+    Handles ``jax.jit(fn)``, ``jax.jit(self._impl)`` and
+    ``jax.jit(lambda ...)``; targets defined in other modules resolve to
+    None and are skipped (the rule only reasons about signatures it can
+    see)."""
+    if not call.args:
+        return None
+    target = call.args[0]
+    if isinstance(target, ast.Lambda):
+        return target
+    name = None
+    if isinstance(target, ast.Name):
+        name = target.id
+    elif isinstance(target, ast.Attribute):
+        name = target.attr
+    if name is None:
+        return None
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == name:
+            return node
+    return None
+
+
+@register_rule(
+    "donation-miss",
+    "jax.jit calls in serve/ and core/ whose wrapped function takes a "
+    "params-sized tree (params/stacked/leaves/cache/bank/...) must declare "
+    "donate_argnums (buffer reuse is the point of the in-place write "
+    "programs) or carry a reasoned pragma naming why the buffer must "
+    "survive the call — the program auditor then verifies declared "
+    "donations are actually applied by XLA.")
+def donation_miss(sf: SourceFile, ctx: Context):
+    cfg = ctx.config
+    if not _in_file(sf.rel, cfg.donation_scope):
+        return
+    aliases = import_aliases(sf.tree)
+    tree_names = set(cfg.donation_tree_params)
+    for node, _fn, name in _jit_calls(sf, aliases):
+        if any(kw.arg in ("donate_argnums", "donate_argnames")
+               for kw in node.keywords):
+            continue
+        target = _resolve_jit_target(node, sf)
+        if target is None:
+            continue
+        args = target.args
+        named = [a.arg for a in
+                 list(args.posonlyargs) + list(args.args)
+                 + list(args.kwonlyargs)]
+        hit = [a for a in named if a in tree_names]
+        if hit:
+            tname = getattr(target, "name", "<lambda>")
+            yield Finding(
+                sf.rel, node.lineno, "donation-miss",
+                f"{name}({tname}) takes params-sized tree argument(s) "
+                f"{hit} but declares no donate_argnums — the caller's "
+                f"buffer is copied, not reused; donate it or pragma the "
+                f"reason the old buffer must stay alive")

@@ -104,6 +104,90 @@ def clear_jit_cache() -> None:
         _JIT_STATS[k] = 0
 
 
+# -- program-auditor enumeration hook ---------------------------------------
+
+def _abstract_batch(cfg, lead: tuple, seq: int) -> dict:
+    """ShapeDtypeStruct batch with leading axes ``lead`` (family-aware)."""
+    SDS = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        batch = {"patches": SDS(lead + (cfg.n_prefix_tokens, cfg.d_model), dt)}
+        if cfg.task == "lm":
+            batch["tokens"] = SDS(
+                lead + (max(seq - cfg.n_prefix_tokens, 4),), jnp.int32)
+        else:
+            batch["label"] = SDS(lead, jnp.int32)
+        return batch
+    if cfg.family == "audio":
+        return {"frames": SDS(lead + (cfg.enc_seq, cfg.d_model), dt),
+                "tokens": SDS(lead + (seq,), jnp.int32)}
+    return {"tokens": SDS(lead + (seq,), jnp.int32)}
+
+
+def suite_program_specs(model: "Model", *, cohort: int = 2, tau: int = 2,
+                        batch: int = 2, seq: int = 16, sel_batches: int = 1,
+                        cuts: "tuple | None" = None) -> list[dict]:
+    """Shape-only audit specs for every training-suite program family.
+
+    One dict per program the jit cache can hold for this (cfg, runtime):
+    the dense round step, every masked-cut variant (``cuts`` defaults to
+    all L+1, including the cut=L forward-only program), the cohort probe,
+    and the fused probe+update (dense + one masked representative).  The
+    program auditor (repro.analysis.program) lowers each entry's ``fn`` on
+    its abstract ``args`` — nothing here allocates or executes.  Plain
+    dicts, not analysis types: core must not import the auditor.
+    """
+    client = Client(model)
+    cfg = model.cfg
+    SDS = jax.ShapeDtypeStruct
+    from repro.models.model import init_params
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            SDS((2,), jnp.uint32))
+    L = model.n_selectable
+    batches = _abstract_batch(cfg, (cohort, tau, batch), seq)
+    pbatches = _abstract_batch(cfg, (cohort, sel_batches, batch), seq)
+    masks = SDS((cohort, L), jnp.float32)
+    sizes = SDS((cohort,), jnp.float32)
+    lr = SDS((), jnp.float32)
+    reqs = ("grad_sq_norms",)
+    if cuts is None:
+        cuts = tuple(range(L + 1))
+    # training entries deliberately do NOT donate: params feed the probe /
+    # sequential-oracle paths of the same round (meta records it so the
+    # donation contract skips them)
+    base = dict(static_argnums=(), donate_argnums=(), weight_argnums=(0,))
+    specs = [
+        dict(base, name="fl_step", fn=client._cohort_update,
+             args=(params, batches, masks, sizes, lr),
+             meta={"kind": "fl_step", "single_host": True}),
+        dict(base, name="probe", fn=client._probe_cohort,
+             args=(params, pbatches, reqs, None), static_argnums=(2, 3),
+             meta={"kind": "probe", "single_host": True}),
+        dict(base, name="probe_update", fn=client._probe_update_cohort,
+             args=(params, batches, masks, sizes, lr, pbatches, reqs, None),
+             static_argnums=(6, 7),
+             meta={"kind": "probe_update", "single_host": True}),
+    ]
+    mid = cuts[len(cuts) // 2] if cuts else 0
+    for cut in cuts:
+        specs.append(dict(
+            base, name=f"fl_step_masked/cut{cut}",
+            fn=client._cohort_update_masked,
+            args=(params, batches, masks, sizes, lr, int(cut)),
+            static_argnums=(5,),
+            meta={"kind": "fl_step_masked", "cut": int(cut),
+                  "n_selectable": L, "single_host": True}))
+    specs.append(dict(
+        base, name=f"probe_update_masked/cut{mid}",
+        fn=client._probe_update_cohort_masked,
+        args=(params, batches, masks, sizes, lr, pbatches, int(mid), reqs,
+              None),
+        static_argnums=(6, 7, 8),
+        meta={"kind": "probe_update_masked", "cut": int(mid),
+              "single_host": True}))
+    return specs
+
+
 def probe_stats_dict(stats) -> dict[str, np.ndarray]:
     """Materialise a probe result to host numpy.  Accepts the stat dict the
     probe impls return, or the legacy (sq, mean, var, p_sq) 4-tuple."""
@@ -131,20 +215,24 @@ class Client:
             # caches one trace per distinct requirement set / score fn, so
             # requirement-trimmed probes and fused device scoring share the
             # same suite entry (strategy singletons keep identities stable)
+            # training entries deliberately never donate params: the same
+            # round's params buffer also feeds the probe and the sequential
+            # oracle paths, and Δ needs θ^{t,0} after the scan — donation
+            # is owned by the serve write programs
             suite = {
-                "local_update": jax.jit(self._local_update_impl),
-                "probe": jax.jit(self._probe_impl, static_argnums=(2, 3)),
-                "eval": jax.jit(self._eval_impl),
-                "cohort_update": jax.jit(self._cohort_update_impl),
+                "local_update": jax.jit(self._local_update_impl),  # repro: allow[donation-miss] -- params reused by the probe/oracle paths in the same round
+                "probe": jax.jit(self._probe_impl, static_argnums=(2, 3)),  # repro: allow[donation-miss] -- probe is read-only over params
+                "eval": jax.jit(self._eval_impl),  # repro: allow[donation-miss] -- eval is read-only over params
+                "cohort_update": jax.jit(self._cohort_update_impl),  # repro: allow[donation-miss] -- Δ = θ^{t,0} − θ^{t,τ} needs the pre-round params alive
                 # mask-aware engine: one program variant per static prefix
                 # cut (≤ L+1 total; jit_cache_stats()["programs"] pins it)
-                "cohort_update_masked": jax.jit(
+                "cohort_update_masked": jax.jit(  # repro: allow[donation-miss] -- Δ = θ^{t,0} − θ^{t,τ} needs the pre-round params alive
                     self._cohort_update_masked_impl, static_argnums=(5,)),
-                "probe_cohort": jax.jit(self._probe_cohort_impl,
+                "probe_cohort": jax.jit(self._probe_cohort_impl,  # repro: allow[donation-miss] -- probe is read-only over params
                                         static_argnums=(2, 3)),
-                "probe_update_cohort": jax.jit(self._probe_update_cohort_impl,
+                "probe_update_cohort": jax.jit(self._probe_update_cohort_impl,  # repro: allow[donation-miss] -- Δ = θ^{t,0} − θ^{t,τ} needs the pre-round params alive
                                                static_argnums=(6, 7)),
-                "probe_update_cohort_masked": jax.jit(
+                "probe_update_cohort_masked": jax.jit(  # repro: allow[donation-miss] -- Δ = θ^{t,0} − θ^{t,τ} needs the pre-round params alive
                     self._probe_update_cohort_masked_impl,
                     static_argnums=(6, 7, 8)),
             }

@@ -30,8 +30,8 @@ from repro.configs.base import (ASSIGNED_ARCHS, INPUT_SHAPES, RuntimeConfig,
 from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import Model, count_params, count_active_params, init_params
+from repro.analysis import costmodel as CM
 from repro.sharding import hlo_analysis as H
-from repro.sharding import hlo_cost as HC
 from repro.sharding import rules
 from repro.sharding.fl_step import make_fl_train_step
 from repro.sharding.serve import make_prefill_step, make_serve_step
@@ -110,13 +110,14 @@ def lower_pair(arch_name: str, shape_name: str, multi_pod: bool,
     t_compile = time.time() - t0  # repro: allow[nondeterminism] -- compile/lower timing telemetry only
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
     hlo = compiled.as_text()
 
-    # scan-aware per-DEVICE cost (hlo_cost multiplies while bodies by trip
-    # count; raw cost_analysis counts scan bodies once — recorded for ref)
+    # scan-aware per-DEVICE cost: the shared unrolled backend multiplies
+    # while bodies by their trip counts, so these numbers line up with the
+    # program auditor's CI-gated budgets (repro.analysis.program)
     t0 = time.time()  # repro: allow[nondeterminism] -- compile/lower timing telemetry only
-    m = HC.analyze(hlo)
+    m = CM.analyze(hlo)
+    unrolled = CM.unrolled_summary(hlo)
     t_analyze = time.time() - t0  # repro: allow[nondeterminism] -- compile/lower timing telemetry only
     flops = m.flops * n_chips            # whole-step totals
     hbm_bytes = m.hbm_bytes * n_chips
@@ -159,8 +160,9 @@ def lower_pair(arch_name: str, shape_name: str, multi_pod: bool,
         "collective_bytes": coll_total,
         "collective_by_kind": {k: v * n_chips for k, v in m.coll_bytes.items()},
         "collective_counts": m.coll_counts,
-        "raw_cost_analysis": {k: float(v) for k, v in cost.items()
-                              if isinstance(v, (int, float))},
+        # per-device scan-unrolled summary, same keys as the audited
+        # PROGRAM_BUDGETS.json side (repro.analysis.costmodel)
+        "unrolled_cost_analysis": unrolled,
         "roofline": terms,
         "dominant": H.dominant_term(terms),
         "model_flops": model_flops,
@@ -181,7 +183,7 @@ def run_one(arch: str, shape: str, multi_pod: bool, save: bool = True,
     report, compiled = lower_pair(arch, shape, multi_pod, runtime=runtime,
                                   sel_frac=sel_frac)
     print(json.dumps({k: v for k, v in report.items()
-                      if k not in ("memory", "raw_cost_analysis")},
+                      if k not in ("memory", "unrolled_cost_analysis")},
                      indent=None, default=str))
     print("memory_analysis:", report["memory"])
     if save:

@@ -145,10 +145,15 @@ def serve_suite(model: Model) -> dict:
         return jax.tree.map(lambda s, x: s.at[b].set(x.astype(s.dtype)),
                             stacked, p)
 
+    # decode entries never donate: the base params (and the dense bank)
+    # are shared state serving EVERY slot across steps, and the parity
+    # oracles replay one cache snapshot through shared/delta/dense
+    # programs — the donated paths are the write programs below, whose
+    # aliasing the program auditor verifies (donation-honored contract)
     suite = {
-        "serve_decode": jax.jit(_decode, static_argnums=(4,)),
-        "serve_decode_delta": jax.jit(_decode_delta, static_argnums=(5,)),
-        "serve_decode_dense": jax.jit(_decode_dense, static_argnums=(4,)),
+        "serve_decode": jax.jit(_decode, static_argnums=(4,)),  # repro: allow[donation-miss] -- shared base params + replayed cache snapshots outlive the call
+        "serve_decode_delta": jax.jit(_decode_delta, static_argnums=(5,)),  # repro: allow[donation-miss] -- shared base params + replayed cache snapshots outlive the call
+        "serve_decode_dense": jax.jit(_decode_dense, static_argnums=(4,)),  # repro: allow[donation-miss] -- the stacked bank is reused across decode steps; only refills rewrite it
         "serve_reset_slot": jax.jit(model.reset_slot,
                                     static_argnames=("stacked",)),
         "serve_write_params": jax.jit(_write_params, donate_argnums=0),
@@ -159,6 +164,92 @@ def serve_suite(model: Model) -> dict:
         _JIT_CACHE[key] = suite
         _JIT_STATS["misses"] += 1
     return suite
+
+
+# -- program-auditor enumeration hook ---------------------------------------
+
+def serve_program_specs(model: Model, *, slots: int = 3, capacity: int = 2,
+                        capacities: tuple = (1, 2, 3), max_seq: int = 16,
+                        window: int = 0) -> list[dict]:
+    """Shape-only audit specs for every serving program family.
+
+    Covers shared decode, the delta decode at batch ``slots`` AND
+    ``2·slots`` for each overlay capacity in ``capacities`` (the auditor's
+    B-independence / C-linearity contract reads these), the dense vmapped
+    baseline at both batches (its weight traffic MUST scale with B — the
+    contrast that makes the delta contract meaningful), and the two donated
+    writes (overlay entry write, dense bank refill).  Plain dicts; nothing
+    allocates.
+    """
+    from repro.models.model import init_params
+    suite = serve_suite(model)
+    cfg = model.cfg
+    SDS = jax.ShapeDtypeStruct
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            SDS((2,), jnp.uint32))
+    L = cfg.n_layers
+
+    def cache_for(b):
+        return jax.eval_shape(lambda: model.init_cache(
+            b, max_seq, window=window, per_slot=True))
+
+    def toks_pos(b):
+        return SDS((b,), jnp.int32), SDS((b,), jnp.int32)
+
+    base = dict(static_argnums=(), donate_argnums=(), weight_argnums=(0,))
+    common = {"single_host": True, "dtype": cfg.dtype}
+    specs = []
+    for b in (slots, 2 * slots):
+        tok, pos = toks_pos(b)
+        specs.append(dict(
+            base, name=f"serve_decode/B{b}", fn=suite["serve_decode"],
+            args=(params, tok, pos, cache_for(b), window),
+            static_argnums=(4,),
+            meta=dict(common, kind="serve_decode", batch=b)))
+    if supports_delta_decode(cfg):
+        shapes = _block_shapes(cfg, "dense")
+        for b in (slots, 2 * slots):
+            tok, pos = toks_pos(b)
+            for C in capacities:
+                delta = {
+                    "slots": SDS((L, C), jnp.int32),
+                    "leaves": {name: SDS((L, C) + tuple(shp), jnp.float32)
+                               for name, shp in shapes.items()}}
+                specs.append(dict(
+                    base, name=f"serve_decode_delta/B{b}/C{C}",
+                    fn=suite["serve_decode_delta"],
+                    args=(params, tok, pos, cache_for(b), delta, window),
+                    static_argnums=(5,), weight_argnums=(0, 4),
+                    meta=dict(common, kind="serve_decode_delta", batch=b,
+                              capacity=C)))
+        leaves = {name: SDS((L, capacity) + tuple(shp), jnp.float32)
+                  for name, shp in shapes.items()}
+        rows = {name: SDS(tuple(shp), jnp.float32)
+                for name, shp in shapes.items()}
+        specs.append(dict(
+            base, name="serve_write_delta_entry",
+            fn=jax.jit(_write_entry, donate_argnums=0),
+            args=(leaves, SDS((), jnp.int32), SDS((), jnp.int32), rows),
+            donate_argnums=(0,),
+            meta=dict(common, kind="delta_write", donates=True)))
+    for b in (slots, 2 * slots):
+        tok, pos = toks_pos(b)
+        stacked = jax.eval_shape(lambda t: stack_tree(t, b), params)
+        dense_cache = jax.eval_shape(lambda: stack_tree(
+            model.init_cache(1, max_seq, window=window, per_slot=True), b))
+        specs.append(dict(
+            base, name=f"serve_decode_dense/B{b}",
+            fn=suite["serve_decode_dense"],
+            args=(stacked, tok, pos, dense_cache, window),
+            static_argnums=(4,),
+            meta=dict(common, kind="serve_decode_dense", batch=b)))
+    stacked = jax.eval_shape(lambda t: stack_tree(t, slots), params)
+    specs.append(dict(
+        base, name="serve_write_params", fn=suite["serve_write_params"],
+        args=(stacked, params, SDS((), jnp.int32)),
+        donate_argnums=(0,), weight_argnums=(0, 1),
+        meta=dict(common, kind="dense_write", donates=True)))
+    return specs
 
 
 def stack_tree(tree, n: int):

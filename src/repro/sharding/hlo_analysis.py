@@ -11,39 +11,19 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
+from repro.analysis.costmodel import shape_bytes as _shape_bytes
+
 PEAK_FLOPS = 197e12       # bf16 per chip
 HBM_BW = 819e9            # bytes/s per chip
 ICI_BW = 50e9             # bytes/s per link
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-}
-
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
-# shapes like  bf16[2,4096,128]  or tuple elements; capture dtype + dims
-_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 _OP_RE = re.compile(
     r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
     r"(?:-start)?\(")
-
-
-def _shape_bytes(text: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(text):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
 
 
 @dataclass

@@ -1,342 +1,15 @@
-"""Scan-aware cost analysis over optimized HLO text.
-
-``compiled.cost_analysis()`` counts a ``while`` body **once**, but our whole
-stack (layer scans, chunked attention, chunked CE, SSD) lowers to while
-loops — undercounting FLOPs by ~L×.  This analyzer walks the computation
-graph, multiplies loop bodies by their trip counts (recovered from the loop
-condition's comparison constant), and produces:
-
-* ``flops``           — dot/elementwise FLOPs, trip-count scaled
-* ``hbm_bytes``       — fusion-boundary traffic model: operands+outputs of
-  top-level ops (fusions count at their boundary — a reasonable proxy for
-  materialised HBM traffic), trip-count scaled
-* ``collective_bytes``— per-kind operand bytes of collectives, trip-count
-  scaled (a collective inside the layer scan runs L times!)
-
-This is the profile §Roofline/§Perf iterate on.  Raw ``cost_analysis`` is
-recorded alongside for reference.
+"""Back-compat shim: the scan-aware HLO cost model moved to
+:mod:`repro.analysis.costmodel` (the shared unrolled-cost backend for the
+roofline dry-runs AND the program auditor, DESIGN.md §11).  Import from
+there; this module re-exports the public surface for existing callers.
 """
-from __future__ import annotations
+from repro.analysis.costmodel import (  # noqa: F401
+    HloCostModel, Metrics, Op, analyze, donation_aliases, dtype_census,
+    shape_bytes, shape_elems, top_collectives, top_hbm_ops,
+    transfer_op_counts)
 
-import re
-from dataclasses import dataclass, field
-from functools import lru_cache
-from typing import Optional
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-}
-
-_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
-                     "all-to-all", "collective-permute")
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
-                     r"([\w\-]+)\(")
-_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->")
-_ATTR_CALLS = re.compile(r"calls=%?([\w.\-]+)")
-_ATTR_BODY = re.compile(r"body=%?([\w.\-]+)")
-_ATTR_COND = re.compile(r"condition=%?([\w.\-]+)")
-_ATTR_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
-_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-_CONST_INT = re.compile(r"constant\((\d+)\)")
-
-
-def shape_bytes(type_text: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_text):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-def shape_elems(type_text: str) -> int:
-    total = 0
-    for _, dims in _SHAPE_RE.findall(type_text):
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n
-    return total
-
-
-@dataclass
-class Op:
-    name: str
-    out_type: str
-    opcode: str
-    operands: tuple[str, ...]
-    line: str
-
-
-@dataclass
-class Metrics:
-    flops: float = 0.0
-    hbm_bytes: float = 0.0
-    coll_bytes: dict = field(default_factory=dict)
-    coll_counts: dict = field(default_factory=dict)
-
-    def add(self, other: "Metrics", times: float = 1.0):
-        self.flops += times * other.flops
-        self.hbm_bytes += times * other.hbm_bytes
-        for k, v in other.coll_bytes.items():
-            self.coll_bytes[k] = self.coll_bytes.get(k, 0) + times * v
-        for k, v in other.coll_counts.items():
-            self.coll_counts[k] = self.coll_counts.get(k, 0) + times * v
-
-    @property
-    def total_coll_bytes(self) -> float:
-        return sum(self.coll_bytes.values())
-
-
-_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
-               "bitcast", "after-all", "partition-id", "replica-id",
-               "iota", "while", "call", "conditional", "custom-call"}
-
-
-class HloCostModel:
-    def __init__(self, hlo_text: str):
-        self.comps: dict[str, list[Op]] = {}
-        self.shapes: dict[str, str] = {}
-        self.entry: Optional[str] = None
-        self._parse(hlo_text)
-        self._memo: dict[str, Metrics] = {}
-
-    # -- parsing -----------------------------------------------------------
-    def _parse(self, text: str):
-        cur = None
-        comment = re.compile(r"/\*.*?\*/")
-        for raw in text.splitlines():
-            line = comment.sub("", raw.rstrip())
-            if not line or line.startswith("HloModule"):
-                continue
-            if not line.startswith(" ") and ("->" in line) and line.endswith("{"):
-                head = line.strip()
-                is_entry = head.startswith("ENTRY")
-                if is_entry:
-                    head = head[len("ENTRY"):].strip()
-                cur = head.split()[0].split("(")[0].lstrip("%")
-                self.comps[cur] = []
-                if is_entry:
-                    self.entry = cur
-                continue
-            if line.strip() == "}":
-                continue
-            m = _DEF_RE.match(line)
-            if m and cur is not None:
-                name, out_type, opcode = m.group(1), m.group(2).strip(), m.group(3)
-                operands = self._operand_names(line, opcode)
-                self.comps[cur].append(Op(name, out_type, opcode, operands, line))
-                self.shapes[name] = out_type
-
-    @staticmethod
-    def _operand_names(line: str, opcode: str) -> tuple[str, ...]:
-        try:
-            start = line.index(opcode + "(") + len(opcode) + 1
-        except ValueError:
-            return ()
-        depth = 1
-        buf = []
-        for ch in line[start:]:
-            if ch == "(":
-                depth += 1
-            elif ch == ")":
-                depth -= 1
-                if depth == 0:
-                    break
-            buf.append(ch)
-        inner = "".join(buf)
-        return tuple(re.findall(r"%([\w.\-]+)", inner))
-
-    # -- helpers -----------------------------------------------------------
-    def _op_bytes(self, op: Op) -> int:
-        total = shape_bytes(op.out_type)
-        for o in op.operands:
-            total += shape_bytes(self.shapes.get(o, ""))
-        return total
-
-    def _operand_bytes(self, op: Op) -> int:
-        return sum(shape_bytes(self.shapes.get(o, "")) for o in op.operands)
-
-    def _dot_flops(self, op: Op) -> float:
-        out_elems = shape_elems(op.out_type)
-        m = _LHS_C.search(op.line)
-        contraction = 1
-        if m and op.operands:
-            lhs_shape = self.shapes.get(op.operands[0], "")
-            sm = _SHAPE_RE.search(lhs_shape)
-            if sm and sm.group(2):
-                dims = [int(d) for d in sm.group(2).split(",")]
-                for idx in (int(i) for i in m.group(1).split(",") if i):
-                    if idx < len(dims):
-                        contraction *= dims[idx]
-        return 2.0 * out_elems * contraction
-
-    def trip_count(self, cond_comp: str) -> int:
-        """Max integer constant in the loop condition (jax scans compare
-        the induction variable against the trip count)."""
-        best = 1
-        stack = [cond_comp]
-        seen = set()
-        while stack:
-            c = stack.pop()
-            if c in seen or c not in self.comps:
-                continue
-            seen.add(c)
-            for op in self.comps[c]:
-                for m in _CONST_INT.finditer(op.line):
-                    best = max(best, int(m.group(1)))
-                cm = _ATTR_CALLS.search(op.line)
-                if cm:
-                    stack.append(cm.group(1))
-        return best
-
-    # -- main recursion ------------------------------------------------------
-    def metrics(self, comp: Optional[str] = None) -> Metrics:
-        comp = comp or self.entry
-        if comp in self._memo:
-            return self._memo[comp]
-        out = Metrics()
-        self._memo[comp] = out            # guard (no recursion in valid HLO)
-        for op in self.comps.get(comp, []):
-            oc = op.opcode
-            if oc == "while":
-                body = _ATTR_BODY.search(op.line)
-                cond = _ATTR_COND.search(op.line)
-                trips = self.trip_count(cond.group(1)) if cond else 1
-                if body:
-                    out.add(self.metrics(body.group(1)), trips)
-                if cond:
-                    out.add(self.metrics(cond.group(1)), trips)
-            elif oc == "fusion":
-                called = _ATTR_CALLS.search(op.line)
-                if called:
-                    inner = self.metrics(called.group(1))
-                    out.flops += inner.flops          # dots inside fusions
-                # HBM model: fusion boundary traffic only
-                out.hbm_bytes += self._op_bytes(op)
-            elif oc in ("call", "conditional", "async-start"):
-                for attr in (_ATTR_CALLS, _ATTR_BODY, _ATTR_TO_APPLY):
-                    m = attr.search(op.line)
-                    if m:
-                        out.add(self.metrics(m.group(1)))
-            elif oc == "dot":
-                out.flops += self._dot_flops(op)
-                out.hbm_bytes += self._op_bytes(op)
-            elif oc == "convolution":
-                out.flops += 2.0 * shape_elems(op.out_type) * 16  # coarse
-                out.hbm_bytes += self._op_bytes(op)
-            elif any(oc.startswith(k) for k in _COLLECTIVE_KINDS):
-                kind = next(k for k in _COLLECTIVE_KINDS if oc.startswith(k))
-                b = self._operand_bytes(op) or shape_bytes(op.out_type)
-                out.coll_bytes[kind] = out.coll_bytes.get(kind, 0) + b
-                out.coll_counts[kind] = out.coll_counts.get(kind, 0) + 1
-                out.hbm_bytes += self._op_bytes(op)
-            elif oc in _SKIP_BYTES:
-                continue
-            elif oc in ("reduce", "reduce-window"):
-                out.flops += shape_elems(" ".join(
-                    self.shapes.get(o, "") for o in op.operands))
-                out.hbm_bytes += self._op_bytes(op)
-            else:
-                # standalone elementwise / data movement op
-                out.flops += shape_elems(op.out_type)
-                out.hbm_bytes += self._op_bytes(op)
-        return out
-
-
-def analyze(hlo_text: str) -> Metrics:
-    return HloCostModel(hlo_text).metrics()
-
-
-def top_collectives(hlo_text: str, n: int = 12) -> list[dict]:
-    """Largest individual collectives with their executed-times multiplier —
-    the §Perf profile: tells you *which* op inside *which* loop to attack."""
-    model = HloCostModel(hlo_text)
-
-    # executed-times per computation (entry=1, while bodies × trips)
-    times: dict[str, float] = {model.entry: 1.0}
-    order = [model.entry]
-    i = 0
-    while i < len(order):
-        comp = order[i]
-        i += 1
-        for op in model.comps.get(comp, []):
-            mult = times[comp]
-            for attr, extra in ((_ATTR_BODY, None), (_ATTR_CALLS, None)):
-                m = attr.search(op.line)
-                if not m:
-                    continue
-                child = m.group(1)
-                t = mult
-                if op.opcode == "while":
-                    cond = _ATTR_COND.search(op.line)
-                    t = mult * (model.trip_count(cond.group(1)) if cond else 1)
-                times[child] = times.get(child, 0) + t
-                if child not in order:
-                    order.append(child)
-
-    rows = []
-    for comp, ops in model.comps.items():
-        t = times.get(comp, 0.0)
-        if t == 0:
-            continue
-        for op in ops:
-            if not any(op.opcode.startswith(k) for k in _COLLECTIVE_KINDS):
-                continue
-            b = model._operand_bytes(op) or shape_bytes(op.out_type)
-            rows.append({"op": op.name, "kind": op.opcode, "comp": comp,
-                         "bytes": b, "times": t, "total": b * t,
-                         "shape": op.out_type[:60],
-                         "meta": op.line[op.line.find("metadata="):][:120]})
-    rows.sort(key=lambda r: -r["total"])
-    return rows[:n]
-
-
-def top_hbm_ops(hlo_text: str, n: int = 12) -> list[dict]:
-    """Largest HBM-traffic ops (fusion boundaries), executed-times scaled."""
-    model = HloCostModel(hlo_text)
-    times: dict[str, float] = {model.entry: 1.0}
-    order = [model.entry]
-    i = 0
-    while i < len(order):
-        comp = order[i]
-        i += 1
-        for op in model.comps.get(comp, []):
-            m = _ATTR_BODY.search(op.line) or (
-                _ATTR_CALLS.search(op.line) if op.opcode != "fusion" else None)
-            if m:
-                child = m.group(1)
-                t = times[comp]
-                if op.opcode == "while":
-                    cond = _ATTR_COND.search(op.line)
-                    t *= model.trip_count(cond.group(1)) if cond else 1
-                times[child] = times.get(child, 0) + t
-                if child not in order:
-                    order.append(child)
-    rows = []
-    for comp, ops in model.comps.items():
-        t = times.get(comp, 0.0)
-        if t == 0:
-            continue
-        for op in ops:
-            if op.opcode in _SKIP_BYTES or op.opcode == "fusion" and False:
-                continue
-            if op.opcode in _SKIP_BYTES:
-                continue
-            b = model._op_bytes(op)
-            if b:
-                rows.append({"op": op.name, "kind": op.opcode, "comp": comp,
-                             "bytes": b, "times": t, "total": b * t,
-                             "meta": op.line[op.line.find("metadata="):][:140]})
-    rows.sort(key=lambda r: -r["total"])
-    return rows[:n]
+__all__ = [
+    "HloCostModel", "Metrics", "Op", "analyze", "donation_aliases",
+    "dtype_census", "shape_bytes", "shape_elems", "top_collectives",
+    "top_hbm_ops", "transfer_op_counts",
+]

@@ -20,6 +20,32 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(scope="session")
+def program_audit_facts():
+    """Audited ProgramFacts for the contract-bearing subset of the program
+    auditor's enumeration (DESIGN.md §11): the masked-cut series on both
+    the dense and ssm configs, the delta-serving decode family with its
+    dense baseline, the donated writes, and one bf16 decode row.  Session
+    scoped — test_program_audit.py and test_hlo_cost.py share the ~20
+    lowerings instead of paying for them twice."""
+    from repro.analysis import program as P
+
+    def want(s):
+        cfgl = s.meta.get("config")
+        if "fl_step_masked" in s.name:
+            return cfgl in ("dense", "ssm")
+        if cfgl == "dense":
+            return any(k in s.name for k in (
+                "serve_decode_delta", "serve_decode_dense",
+                "serve_write_delta_entry", "serve_write_params"))
+        if cfgl == "dense_bf16":
+            return s.name.endswith("serve_decode/B3")
+        return False
+
+    specs = [s for s in P.enumerate_specs() if want(s)]
+    return P.run_audit(specs)
+
+
 @pytest.fixture
 def strict_mode():
     """Opt-in strict-mode context factory (REPRO_STRICT=1 in CI smoke).

@@ -24,11 +24,11 @@ def rules_hit(findings):
     return {f.rule for f in findings}
 
 
-def test_six_rules_registered():
-    assert len(RULES) >= 6
+def test_rules_registered():
+    assert len(RULES) >= 7
     assert set(RULES) >= {"jit-outside-cache", "host-sync", "nondeterminism",
                           "tracer-hazard", "unhashable-static",
-                          "kernel-parity"}
+                          "kernel-parity", "donation-miss"}
 
 
 # -- jit-outside-cache -------------------------------------------------------
@@ -242,6 +242,62 @@ def test_kernel_parity_flags_untested_fallback(tmp_path):
     assert "foo_jnp" in bad[0].message
 
 
+# -- donation-miss -----------------------------------------------------------
+
+DON_CFG = AnalysisConfig(donation_scope=("serve/",),
+                         donation_tree_params=("params", "stacked"))
+
+
+def test_donation_miss_bad_and_good(tmp_path):
+    bad = lint(tmp_path, {"serve/e.py": """
+        import jax
+        def step(params, x):
+            return params
+        f = jax.jit(step)
+        """}, config=DON_CFG, only=["donation-miss"])
+    assert [f.rule for f in bad] == ["donation-miss"]
+    assert "params" in bad[0].message and "donate_argnums" in bad[0].message
+
+    good = lint(tmp_path, {"serve/g.py": """
+        import jax
+        def write(stacked, p, b):
+            return stacked
+        f = jax.jit(write, donate_argnums=0)       # donates: fine
+        def sample(tokens, key):
+            return tokens
+        g = jax.jit(sample)                        # no params-sized tree
+        """}, config=DON_CFG, only=["donation-miss"])
+    assert not [f for f in good if f.path == "serve/g.py"]
+
+
+def test_donation_miss_lambda_target(tmp_path):
+    bad = lint(tmp_path, {"serve/l.py": """
+        import jax
+        f = jax.jit(lambda stacked, b: stacked)
+        """}, config=DON_CFG, only=["donation-miss"])
+    assert [f.rule for f in bad] == ["donation-miss"]
+
+
+def test_donation_miss_outside_scope_ignored(tmp_path):
+    out = lint(tmp_path, {"probe/e.py": """
+        import jax
+        def step(params, x):
+            return params
+        f = jax.jit(step)
+        """}, config=DON_CFG, only=["donation-miss"])
+    assert not out
+
+
+def test_donation_miss_pragma_escape(tmp_path):
+    out = lint(tmp_path, {"serve/p.py": """
+        import jax
+        def step(params, x):
+            return params
+        f = jax.jit(step)  # repro: allow[donation-miss] -- params shared across slots
+        """}, config=DON_CFG, only=["donation-miss"])
+    assert not out
+
+
 # -- pragmas -----------------------------------------------------------------
 
 def test_pragma_suppresses_with_reason(tmp_path):
@@ -298,6 +354,28 @@ def test_cli_exit_codes(tmp_path):
         "import jax\ndef f(g):\n    return jax.jit(g)\n")
     assert main([str(tmp_path / "bad.py"), "--root", str(tmp_path)]) == 1
     assert main(["--list-rules"]) == 0
+
+
+def test_cli_json_findings(tmp_path, capsys):
+    """--json: the machine-readable findings the CI lint job turns into
+    per-line GitHub annotations."""
+    import json
+
+    from repro.analysis.__main__ import main
+    (tmp_path / "bad.py").write_text(
+        "import jax\ndef f(g):\n    return jax.jit(g)\n")
+
+    rc = main(["--json", str(tmp_path / "bad.py"), "--root", str(tmp_path)])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 1 and not report["ok"]
+    assert [(f["rule"], f["line"]) for f in report["findings"]] == [
+        ("jit-outside-cache", 3)]
+    assert report["findings"][0]["path"] == "bad.py"
+
+    (tmp_path / "ok.py").write_text("x = 1\n")
+    rc = main(["--json", str(tmp_path / "ok.py"), "--root", str(tmp_path)])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 0 and report["ok"] and report["findings"] == []
 
 
 def test_self_lint_repo_clean():

@@ -1,10 +1,18 @@
-"""Scan-aware HLO cost model: known-workload validation."""
+"""Scan-aware HLO cost model: known-workload validation, plus the
+roofline crosscheck — the auditor's measured masked-cut FLOPs must match
+benchmarks/roofline.py's static 3L/(L+2(L−cut)) speedup model on both the
+dense and ssm audit configs."""
+import os
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.sharding.hlo_cost import HloCostModel, analyze, shape_bytes
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def test_shape_bytes():
@@ -61,3 +69,63 @@ def test_entry_detected():
     model = HloCostModel(c.as_text())
     assert model.entry is not None
     assert model.metrics().flops >= 0
+
+
+def test_donation_aliases_nested_entries():
+    """input_output_alias entries nest braces (`{0}: (0, {}, may-alias)`);
+    the parser must read the whole balanced header block, not stop at the
+    first `}` — a multi-leaf donated tree yields one alias per leaf."""
+    from repro.analysis.costmodel import donation_aliases
+
+    tree = {k: jax.ShapeDtypeStruct((8, 8), jnp.float32) for k in "ab"}
+    c = jax.jit(lambda t: {k: v + 1.0 for k, v in t.items()},
+                donate_argnums=0).lower(tree).compile()
+    assert len(donation_aliases(c.as_text())) == 2
+
+    no_donate = jax.jit(lambda t: {k: v + 1.0 for k, v in t.items()}).lower(
+        tree).compile()
+    assert donation_aliases(no_donate.as_text()) == []
+
+
+def test_unrolled_summary_report_shape():
+    """The shared report dict dryrun and the auditor both consume."""
+    from repro.analysis.costmodel import unrolled_summary
+
+    M, K, N = 16, 32, 8
+    c = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((K, N), jnp.float32)).compile()
+    s = unrolled_summary(c.as_text())
+    assert set(s) >= {"flops", "hbm_bytes", "collective_bytes",
+                      "collective_by_kind", "collective_counts",
+                      "transfer_ops", "dtypes", "donation_aliases"}
+    assert s["flops"] == pytest.approx(2 * M * K * N, rel=0.05)
+    assert not s["collective_counts"] and not s["transfer_ops"]
+    assert s["dtypes"].get("f32", 0) > 0
+
+
+# -- roofline crosscheck ------------------------------------------------------
+
+def test_masked_cut_flops_match_roofline(program_audit_facts):
+    """The auditor's compiled-HLO FLOPs reproduce the paper's static
+    speedup model: a frozen prefix of depth `cut` speeds the train step by
+    3L/(L+2(L−cut)) when blocks dominate (the audit configs cap the vocab
+    so they do).  Crosschecked on the dense AND ssm configs."""
+    from benchmarks.roofline import masked_backward_expectations
+
+    for cfg in ("dense", "ssm"):
+        rows = {f.meta["cut"]: f for f in program_audit_facts.values()
+                if f.meta.get("kind") == "fl_step_masked"
+                and f.meta.get("config") == cfg}
+        assert len(rows) >= 3, f"masked-cut series missing for {cfg}"
+        L = rows[max(rows)].meta["n_selectable"]
+        expect = {r["cut"]: r["step_speedup"]
+                  for r in masked_backward_expectations(L, sorted(rows))}
+        base = rows[0].flops
+        for cut in sorted(rows):
+            if cut == 0:
+                continue
+            measured = base / rows[cut].flops
+            assert measured == pytest.approx(expect[cut], rel=0.2), (
+                f"{cfg} cut={cut}: audited speedup {measured:.2f}x vs "
+                f"roofline {expect[cut]:.2f}x")
