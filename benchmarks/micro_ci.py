@@ -1,5 +1,6 @@
 """CI micro-benchmark gate: round_engine + masked_backward + full_round +
-probe_trim + pipeline_depth + population_state + delta_serving.
+probe_trim + pipeline_depth + population_state + delta_serving +
+fault_overhead.
 
     PYTHONPATH=src python -m benchmarks.micro_ci
 
@@ -9,8 +10,9 @@ Runs the engine micro-benchmarks, records them to
 ``experiments/bench/BENCH_full_round.json``,
 ``experiments/bench/BENCH_probe_trim.json``,
 ``experiments/bench/BENCH_pipeline_depth.json``,
-``experiments/bench/BENCH_population_state.json`` and
-``experiments/bench/BENCH_delta_serving.json`` (uploaded as CI
+``experiments/bench/BENCH_population_state.json``,
+``experiments/bench/BENCH_delta_serving.json`` and
+``experiments/bench/BENCH_fault_overhead.json`` (uploaded as CI
 artifacts), and enforces the wall-clock budgets: the vectorized engine
 step must not be slower than the sequential oracle at any cohort size, the
 mask-aware engine must not be slower than the dense program at any
@@ -24,7 +26,9 @@ depth-1 double buffer (paired per-rep ratios), and the population-state
 store's per-round host cost must stay flat when the population grows
 10x (O(cohort) gather/scatter, DESIGN.md §8), and the personalized-delta
 serving decode must not be slower than the dense per-user-params baseline
-at any swept (slots, density) (DESIGN.md §9).  The static program audit
+at any swept (slots, density) (DESIGN.md §9), and a wired-but-disabled
+fault injector must cost at most 1.05x the injector-free round loop
+(DESIGN.md §12).  The static program audit
 (DESIGN.md §11) gates here too: every jit-suite program family is lowered
 on abstract inputs, the compiled-program contracts checked, and the
 committed ``experiments/bench/PROGRAM_BUDGETS.json`` diffed — a cost
@@ -43,6 +47,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     from benchmarks.common import save_result
     from benchmarks.run import (delta_serving_benchmarks,
+                                fault_overhead_benchmarks,
                                 full_round_benchmarks,
                                 masked_backward_benchmarks,
                                 pipeline_depth_benchmarks,
@@ -65,6 +70,8 @@ def main() -> None:
     save_result("BENCH_population_state", popstate)
     serving = delta_serving_benchmarks()
     save_result("BENCH_delta_serving", serving)
+    fault = fault_overhead_benchmarks()
+    save_result("BENCH_fault_overhead", fault)
 
     failures = []
     by_cohort: dict = {}
@@ -141,6 +148,16 @@ def main() -> None:
                 f" paired ratio {row['paired_ratio']:.2f} > 1.10 vs dense "
                 f"per-user params")
 
+    # the chaos seam (DESIGN.md §12) must be free when nothing is injected:
+    # a wired-but-disabled FaultPlan may cost at most the per-stage
+    # _faults_active property check (paired per-rep ratios, 5% ceiling —
+    # tighter than the other gates because the admissible delta is a few
+    # attribute reads, not a different program)
+    if fault["paired_ratio"] > 1.05:
+        failures.append(
+            f"fault_overhead: disabled-injector paired ratio "
+            f"{fault['paired_ratio']:.3f} > 1.05 vs no injector")
+
     # static program budgets (DESIGN.md §11): zero timing noise — the
     # auditor lowers every jit-suite program family on abstract inputs,
     # checks the program-level contracts (cut-monotone FLOPs,
@@ -182,6 +199,8 @@ def main() -> None:
           + ", ".join(f"b{r['slots']}/k{r['density']}: "
                       f"{1.0 / r['paired_ratio']:.2f}x"
                       for r in serving["configs"]))
+    print(f"fault_overhead: disabled-injector paired ratio "
+          f"{fault['paired_ratio']:.3f} vs no injector")
     if failures:
         for f in failures:
             print(f"BUDGET VIOLATION: {f}", file=sys.stderr)
@@ -191,6 +210,7 @@ def main() -> None:
           ">=1.5x at the deepest, trimmed probe <= all-stats, "
           "depth-k <= depth-1, population-state cost flat in n, "
           "delta serving <= dense per-user params at every density, "
+          "disabled fault injector <= 1.05x no-injector, "
           f"{len(facts)} programs statically audited: contracts + budgets)")
 
 

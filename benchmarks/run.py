@@ -380,6 +380,72 @@ def pipeline_depth_benchmarks(depth: int = 4, cohort_n: int = 8,
     return out
 
 
+def fault_overhead_benchmarks(cohort_n: int = 8, rounds: int = 4) -> dict:
+    """Warm µs per round: wired-but-disabled FaultInjector vs no injector.
+
+    The chaos seam's standing cost when nothing is injected must be noise:
+    a disabled injector short-circuits before any rng draw and the guarded
+    program is never dispatched, so the only admissible delta is the
+    ``_faults_active`` property check per stage.  ``micro_ci`` gates the
+    median of *paired* per-rep ratios at ≤ 1.05x (each rep times both
+    sides back to back on a fresh server, so host load spikes cancel).
+    Returns a dict suitable for BENCH_fault_overhead.json.
+    """
+    from dataclasses import replace
+
+    from repro.configs.base import (FLConfig, RuntimeConfig, get_arch,
+                                    reduced)
+    from repro.core.server import FLServer
+    from repro.data.synthetic import (FederatedTaskConfig,
+                                      SyntheticFederatedData)
+    from repro.faults import FaultPlan
+    from repro.models.model import Model
+
+    cfg = replace(reduced(get_arch("xlm_roberta_base"), n_layers=2,
+                          d_model=16), vocab_size=4096)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=4))
+    params = model.init(jax.random.PRNGKey(0))
+    task = FederatedTaskConfig(
+        n_clients=20, n_classes=10, vocab_size=cfg.vocab_size, seq_len=4,
+        samples_per_client=16, skew="label", objective="classification",
+        test_samples=4096)
+    fl = FLConfig(n_clients=20, cohort_size=cohort_n, local_steps=2,
+                  lr=0.01, batch_size=16, strategy="ours", budget=1)
+    # the 1.05x gate is tight, so keep enough samples even in FAST mode —
+    # the config is tiny and the median of paired ratios converges fast
+    rounds = 2 if FAST else rounds
+    reps = 3 if FAST else 5
+    # every fault class armed, master switch off: the contractually-free
+    # configuration (bit-identical results, tests/test_faults.py)
+    disabled = FaultPlan(seed=7, enabled=False, death_rate=0.5,
+                         corrupt_rate=0.5, stall_rate=0.5,
+                         dispatch_fail_rate=0.5, ckpt_corrupt_rate=0.5)
+
+    def fresh(faults):
+        return FLServer(model, fl, SyntheticFederatedData(task),
+                        faults=faults)
+
+    for f in (None, disabled):               # warmup: compile both sides
+        fresh(f).run(params, rounds=2)
+    times: dict = {"none": [], "disabled": []}
+    for _ in range(reps):
+        for key, f in (("none", None), ("disabled", disabled)):
+            server = fresh(f)
+            t0 = time.perf_counter()
+            server.run(params, rounds=rounds)    # run() syncs on finalize
+            times[key].append((time.perf_counter() - t0) / rounds)
+    t_none = np.asarray(times["none"])
+    t_off = np.asarray(times["disabled"])
+    out = {"cohort": cohort_n, "rounds_timed": rounds, "reps": reps,
+           "paired_ratio": float(np.median(t_off / t_none)),
+           "none_us_per_round": float(np.min(t_none) * 1e6),
+           "disabled_us_per_round": float(np.min(t_off) * 1e6)}
+    print(f"fault_none_c{cohort_n},{out['none_us_per_round']:.1f},-")
+    print(f"fault_disabled_c{cohort_n},{out['disabled_us_per_round']:.1f},"
+          f"{out['paired_ratio']:.3f}x_vs_none")
+    return out
+
+
 def full_round_benchmarks(cohort_n: int = 8, rounds: int = 4) -> dict:
     """End-to-end warm µs per *full round* — sampling included.
 

@@ -111,12 +111,23 @@ class AnalysisConfig:
     host_stage_boundary: frozenset = frozenset({
         "plan_round", "sample_round", "save_state", "restore_state",
         "_next_barrier", "_print_round", "_is_ckpt_round",
+        # the fault path materialises survivor/quarantine masks at the
+        # round boundary by design (DESIGN.md §12)
+        "_update_round_faulty",
     })
     # nondeterminism: round/selection/state code where PR 6's flat rng
     # streams are the only sanctioned entropy source
     nondet_scope: tuple[str, ...] = (
         "src/repro/core/", "src/repro/data/", "src/repro/api/",
         "src/repro/serve/", "src/repro/ckpt/", "src/repro/launch/",
+        "src/repro/faults/",
+    )
+    # exception-swallow: failure-handling code where a silently swallowed
+    # exception would defeat the degradation contracts (DESIGN.md §12) —
+    # every except must re-raise, return a verdict, or do real recovery
+    swallow_scope: tuple[str, ...] = (
+        "src/repro/core/", "src/repro/ckpt/", "src/repro/serve/",
+        "src/repro/faults/", "src/repro/launch/",
     )
     # kernel-parity: Pallas modules and where their contracts live
     kernel_dir: str = "src/repro/kernels/"

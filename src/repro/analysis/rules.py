@@ -478,3 +478,46 @@ def donation_miss(sf: SourceFile, ctx: Context):
                 f"{hit} but declares no donate_argnums — the caller's "
                 f"buffer is copied, not reused; donate it or pragma the "
                 f"reason the old buffer must stay alive")
+
+
+# ---------------------------------------------------------------------------
+# Rule: exception-swallow  (contract from the fault harness, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+@register_rule(
+    "exception-swallow",
+    "failure-handling code in core/, ckpt/, serve/, faults/ and launch/ "
+    "must not silently swallow exceptions: a bare 'except:' that never "
+    "re-raises, or an 'except Exception/BaseException:' whose body is "
+    "only pass/continue/..., hides exactly the faults the degradation "
+    "contracts are supposed to surface (count, warn, fall back — never "
+    "ignore).  Narrow the handler to the expected types, or pragma the "
+    "reason swallowing is genuinely safe.")
+def exception_swallow(sf: SourceFile, ctx: Context):
+    if not _in_file(sf.rel, ctx.config.swallow_scope):
+        return
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            if not any(isinstance(n, ast.Raise) for n in ast.walk(node)):
+                yield Finding(
+                    sf.rel, node.lineno, "exception-swallow",
+                    "bare 'except:' with no re-raise swallows every "
+                    "failure (including KeyboardInterrupt) — name the "
+                    "expected exception types or re-raise")
+            continue
+        name = dotted(node.type)
+        if name not in ("Exception", "BaseException"):
+            continue                      # narrow/tuple handlers are fine
+        body_is_noop = all(
+            isinstance(stmt, (ast.Pass, ast.Continue))
+            or (isinstance(stmt, ast.Expr)
+                and isinstance(stmt.value, ast.Constant))
+            for stmt in node.body)
+        if body_is_noop:
+            yield Finding(
+                sf.rel, node.lineno, "exception-swallow",
+                f"'except {name}: pass' silently discards the failure — "
+                f"handle it (count/warn/fall back), narrow the type, or "
+                f"pragma why ignoring it is safe")

@@ -18,14 +18,14 @@ from repro.api.strategy import (PROBE_KEYS, MixtureStrategy,  # noqa: F401
                                 ProbeReport, ScoreStrategy, SelectionContext,
                                 Strategy, UnknownStrategyError, get_strategy,
                                 register_strategy, strategy_names)
-from repro.api.task import (DirichletTaskConfig,  # noqa: F401
+from repro.api.task import (ChaosTask, DirichletTaskConfig,  # noqa: F401
                             DirichletTokenMixtureTask, Task)
 
 __all__ = [
     "PROBE_KEYS", "ProbeReport", "SelectionContext", "Strategy",
     "ScoreStrategy", "MixtureStrategy", "UnknownStrategyError",
     "register_strategy", "get_strategy", "strategy_names",
-    "Task", "DirichletTaskConfig", "DirichletTokenMixtureTask",
+    "Task", "ChaosTask", "DirichletTaskConfig", "DirichletTokenMixtureTask",
     "Experiment",
 ]
 

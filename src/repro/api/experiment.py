@@ -50,6 +50,8 @@ class Experiment:
                  mask_aware: Optional[bool] = None,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 10,
+                 faults: Optional[object] = None,
+                 solver_deadline_s: Optional[float] = None,
                  pretrain_steps: int = 0, pretrain_lr: float = 3e-3,
                  seed: Optional[int] = None,
                  **fl_overrides):
@@ -82,6 +84,10 @@ class Experiment:
         # latest checkpoint under checkpoint_dir
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
+        # chaos seam (DESIGN.md §12): a FaultPlan/FaultInjector, or None.
+        # Wired-but-disabled is contractually bit-identical to None.
+        self.faults = faults
+        self.solver_deadline_s = solver_deadline_s
         self.pretrain_steps = pretrain_steps
         self.pretrain_lr = pretrain_lr
         self._server: Optional[FLServer] = None
@@ -97,7 +103,9 @@ class Experiment:
                                     strategy=self.strategy,
                                     mask_aware=self.mask_aware,
                                     checkpoint_dir=self.checkpoint_dir,
-                                    checkpoint_every=self.checkpoint_every)
+                                    checkpoint_every=self.checkpoint_every,
+                                    faults=self.faults,
+                                    solver_deadline_s=self.solver_deadline_s)
         return self._server
 
     @property

@@ -22,6 +22,14 @@ Optional plan-stage hooks (consumed by ``FLServer.plan_round``):
   drawn cohort; members marked False fail to report this round and are
   dropped before probing/budgeting (the engine never drops everyone).
 
+Fault model note (DESIGN.md §12): these hooks model *pre-round* attrition
+— the engine plans around them before any compute is spent.  *Mid-round*
+failure (a sampled client dying after local training started, or reporting
+a poisoned delta) is the injector's domain (``repro.faults``), handled by
+survivor-reweighted aggregation inside the round step.  :class:`ChaosTask`
+below drives the hooks to their edge cases (empty pools, all-straggler
+rounds) for the degradation tests.
+
 Optional extras some drivers use: ``client_batch(i, batch_size)`` and
 ``pretrain_batch(batch_size)`` (the foundation-model stand-in,
 ``data/pretrain.py``), and ``alpha`` (population data ratios).
@@ -241,3 +249,52 @@ class DirichletTokenMixtureTask:
         if self.cfg.straggler_rate <= 0.0:
             return np.ones(len(cohort), bool)
         return rng.random_sample(len(cohort)) >= self.cfg.straggler_rate
+
+
+class ChaosTask:
+    """Wrap any Task and force its plan-stage hooks to the worst case on
+    chosen rounds — the adversarial fixture of the degradation tests
+    (DESIGN.md §12).
+
+    ``empty_pool_rounds``: rounds whose availability pool is empty (no
+    client reachable); ``all_straggler_rounds``: rounds where every drawn
+    cohort member fails to report.  All other behaviour — data streams,
+    sizes, checkpoint hooks — delegates verbatim to ``inner``, so a
+    ChaosTask run is bit-identical to the inner task outside the listed
+    rounds.
+    """
+
+    def __init__(self, inner, *, empty_pool_rounds=(),
+                 all_straggler_rounds=()):
+        self.inner = inner
+        self.empty_pool_rounds = frozenset(int(t) for t in empty_pool_rounds)
+        self.all_straggler_rounds = frozenset(
+            int(t) for t in all_straggler_rounds)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return self.inner.sizes
+
+    def cohort_batches(self, cohort, batch_size: int, n: int) -> dict:
+        return self.inner.cohort_batches(cohort, batch_size, n)
+
+    def test_batch(self, batch_size: Optional[int] = None) -> dict:
+        return self.inner.test_batch(batch_size)
+
+    def available_clients(self, t: int, rng: np.random.RandomState):
+        if t in self.empty_pool_rounds:
+            return np.zeros(0, np.int64)
+        hook = getattr(self.inner, "available_clients", None)
+        return hook(t, rng) if callable(hook) else None
+
+    def drop_stragglers(self, t: int, cohort: np.ndarray,
+                        rng: np.random.RandomState) -> np.ndarray:
+        if t in self.all_straggler_rounds:
+            return np.zeros(len(cohort), bool)
+        hook = getattr(self.inner, "drop_stragglers", None)
+        if callable(hook):
+            return hook(t, cohort, rng)
+        return np.ones(len(cohort), bool)

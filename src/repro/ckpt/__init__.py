@@ -1,4 +1,5 @@
-from repro.ckpt.checkpoint import (extract_delta,  # noqa: F401
+from repro.ckpt.checkpoint import (all_checkpoint_steps,  # noqa: F401
+                                   extract_delta, latest_intact_step,
                                    latest_step, load_checkpoint_arrays,
                                    restore_checkpoint, save_checkpoint,
-                                   sweep_tmp_dirs)
+                                   sweep_tmp_dirs, verify_checkpoint)

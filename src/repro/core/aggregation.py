@@ -98,6 +98,68 @@ def apply_update(params: PyTree, update: PyTree, lr: float) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
+# Fault-guarded aggregation helpers (DESIGN.md §12): injected corruption +
+# the device-side finite guard, all runtime data through ONE jitted program
+# ---------------------------------------------------------------------------
+
+def _bcast(row: Array, leaf: Array) -> Array:
+    """(n,) row values broadcast against an (n, ...) stacked leaf."""
+    return row.reshape((row.shape[0],) + (1,) * (leaf.ndim - 1))
+
+
+def corrupt_delta_rows(deltas: PyTree, codes: Array,
+                       explode_scale) -> PyTree:
+    """Apply per-row injected corruption to a stacked (n, ...) delta tree.
+
+    ``codes`` (n,) int32 uses :data:`repro.faults.CORRUPT_CODES`:
+    0 = clean, 1 = NaN-fill, 2 = Inf-fill, 3 = ×``explode_scale``.  Codes
+    are runtime data, so every fault pattern replays the same compiled
+    round program (the no-recompile contract, jit_cache_stats pinned).
+    """
+    codes = jnp.asarray(codes, jnp.int32)
+
+    def one(x):
+        c = _bcast(codes, x)
+        x = jnp.where(c == 3, x * jnp.asarray(explode_scale, x.dtype), x)
+        x = jnp.where(c == 2, jnp.inf, x)
+        return jnp.where(c == 1, jnp.nan, x)
+
+    return jax.tree.map(one, deltas)
+
+
+def finite_row_mask(deltas: PyTree, max_sq) -> Array:
+    """(n,) f32 quarantine mask over a stacked delta tree: 1 where every
+    leaf entry of the row is finite AND the row's total Δ sq-norm is at
+    most ``max_sq`` (accumulated in f32, like everything else on device —
+    an exploding row that overflows f32 reads as non-finite and is
+    quarantined by the first predicate).
+    """
+    leaves = jax.tree.leaves(deltas)
+    fin = None
+    sq = None
+    for x in leaves:
+        x = x.astype(jnp.float32)
+        axes = tuple(range(1, x.ndim))
+        f = jnp.all(jnp.isfinite(x), axis=axes)
+        s = jnp.sum(x * x, axis=axes)
+        fin = f if fin is None else fin & f
+        sq = s if sq is None else sq + s
+    ok = fin & (sq <= jnp.asarray(max_sq, jnp.float32))
+    return ok.astype(jnp.float32)
+
+
+def zero_delta_rows(deltas: PyTree, ok: Array) -> PyTree:
+    """Zero the rows ``ok`` marks dead/quarantined.  Mandatory before the
+    Eq.(5) contraction: a zero Eq.(7) weight does NOT neutralise a NaN/Inf
+    delta (0·NaN = NaN inside the einsum) — the rows must be zeroed
+    *before* they meet the weights."""
+    ok = jnp.asarray(ok, jnp.float32)
+    return jax.tree.map(
+        lambda x: jnp.where(_bcast(ok, x) > 0, x, jnp.zeros((), x.dtype)),
+        deltas)
+
+
+# ---------------------------------------------------------------------------
 # Mask-aware (prefix-cut) aggregation: Eq. (5)-(6) over the trainable slice
 # ---------------------------------------------------------------------------
 

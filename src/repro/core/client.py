@@ -79,6 +79,11 @@ def _dev_f32(x) -> Array:
     return jax.device_put(np.asarray(x, np.float32))  # repro: allow[host-sync] -- h2d staging of host-final round inputs, not a device sync
 
 
+def _dev_i32(x) -> Array:
+    """Integer twin of :func:`_dev_f32` (fault-code rows et al.)."""
+    return jax.device_put(np.asarray(x, np.int32))  # repro: allow[host-sync] -- h2d staging of host-final round inputs, not a device sync
+
+
 def masked_suffix_sgd(trainable: PyTree, grads: PyTree, mask: Array, lr,
                       cut: int, cfg, *, mode: str | None = None) -> PyTree:
     """Fused Eq.(3) apply on the trainable suffix slice — the mask-aware
@@ -167,6 +172,14 @@ def suite_program_specs(model: "Model", *, cohort: int = 2, tau: int = 2,
              args=(params, batches, masks, sizes, lr, pbatches, reqs, None),
              static_argnums=(6, 7),
              meta={"kind": "probe_update", "single_host": True}),
+        # the fault path's one extra variant (DESIGN.md §12): survivor
+        # mask / corruption codes / guard scales are runtime arrays
+        dict(base, name="fl_step_guarded",
+             fn=client._cohort_update_guarded,
+             args=(params, batches, masks, sizes, lr,
+                   SDS((cohort,), jnp.float32), SDS((cohort,), jnp.int32),
+                   SDS((), jnp.float32), SDS((), jnp.float32)),
+             meta={"kind": "fl_step_guarded", "single_host": True}),
     ]
     mid = cuts[len(cuts) // 2] if cuts else 0
     for cut in cuts:
@@ -224,6 +237,11 @@ class Client:
                 "probe": jax.jit(self._probe_impl, static_argnums=(2, 3)),  # repro: allow[donation-miss] -- probe is read-only over params
                 "eval": jax.jit(self._eval_impl),  # repro: allow[donation-miss] -- eval is read-only over params
                 "cohort_update": jax.jit(self._cohort_update_impl),  # repro: allow[donation-miss] -- Δ = θ^{t,0} − θ^{t,τ} needs the pre-round params alive
+                # fault path (DESIGN.md §12): the ONE guarded variant —
+                # survivors/codes/scales are runtime arrays, so every
+                # fault pattern replays this single compiled program
+                "cohort_update_guarded": jax.jit(  # repro: allow[donation-miss] -- Δ = θ^{t,0} − θ^{t,τ} needs the pre-round params alive
+                    self._cohort_update_guarded_impl),
                 # mask-aware engine: one program variant per static prefix
                 # cut (≤ L+1 total; jit_cache_stats()["programs"] pins it)
                 "cohort_update_masked": jax.jit(  # repro: allow[donation-miss] -- Δ = θ^{t,0} − θ^{t,τ} needs the pre-round params alive
@@ -247,6 +265,7 @@ class Client:
         self._probe = suite["probe"]
         self._eval = suite["eval"]
         self._cohort_update = suite["cohort_update"]
+        self._cohort_update_guarded = suite["cohort_update_guarded"]
         self._cohort_update_masked = suite["cohort_update_masked"]
         self._probe_cohort = suite["probe_cohort"]
         self._probe_update_cohort = suite["probe_update_cohort"]
@@ -295,6 +314,60 @@ class Client:
         update = agg.aggregate_stacked(deltas, weights, self.cfg)
         new_params = agg.apply_update(params, update, lr)
         return new_params, losses
+
+    # -- fault-guarded cohort round: survivor reweighting + finite guard ----
+    def _cohort_update_guarded_impl(self, params: PyTree, batches: PyTree,
+                                    masks: Array, sizes: Array, lr: Array,
+                                    survivors: Array, codes: Array,
+                                    explode_scale: Array, max_delta_sq: Array):
+        """The ONE masked round-step variant the fault path adds
+        (DESIGN.md §12): identical local math to ``_cohort_update_impl``,
+        then injected corruption (``codes``), the device-side finite
+        guard, and survivor-reweighted Eq.(5)-(7) aggregation — all of it
+        runtime data, so one compiled program serves every fault pattern
+        and a no-fault call (survivors=1, codes=0) computes exactly the
+        dense step's params.
+
+        Returns ``(new_params, losses, ok)``: ``ok`` (n,) f32 marks the
+        rows that actually aggregated (alive AND finite AND under the
+        norm threshold).  Dead/quarantined rows are zeroed *before* the
+        contraction (0-weight × NaN = NaN otherwise) and their sizes
+        zeroed in the Eq.(7) renormalisation — a layer all of whose
+        selectors died gets weight 0 everywhere and the global params
+        pass through bit-exact (θ − η·0 = θ).
+        """
+        from repro.core import aggregation as agg
+
+        def one(b, m):
+            return self._local_update_impl(params, b, m, lr)
+
+        deltas, losses = jax.vmap(one)(batches, masks)
+        deltas = agg.corrupt_delta_rows(deltas, codes, explode_scale)
+        ok = agg.finite_row_mask(deltas, max_delta_sq) * survivors
+        deltas = agg.zero_delta_rows(deltas, ok)
+        weights = M.aggregation_weights(masks, sizes * ok)   # survivors only
+        update = agg.aggregate_stacked(deltas, weights, self.cfg)
+        new_params = agg.apply_update(params, update, lr)
+        return new_params, losses, ok
+
+    def cohort_update_guarded_raw(self, params, batches, masks, sizes, lr,
+                                  survivors, codes, explode_scale,
+                                  max_delta_sq):
+        """Async fault-guarded round step (device arrays, no sync)."""
+        return self._cohort_update_guarded(
+            params, batches, _dev_f32(masks), _dev_f32(sizes), _dev_f32(lr),
+            _dev_f32(survivors), _dev_i32(codes), _dev_f32(explode_scale),
+            _dev_f32(max_delta_sq))
+
+    def cohort_update_guarded(self, params, batches, masks, sizes, lr,
+                              survivors, codes, explode_scale, max_delta_sq
+                              ) -> tuple[PyTree, np.ndarray, np.ndarray]:
+        """Blocking :meth:`cohort_update_guarded_raw`: np losses + ok."""
+        new_params, losses, ok = self.cohort_update_guarded_raw(
+            params, batches, masks, sizes, lr, survivors, codes,
+            explode_scale, max_delta_sq)
+        # repro: allow[host-sync] -- fault accounting is a sanctioned round-boundary sync (DESIGN.md §12)
+        return new_params, np.asarray(losses), np.asarray(ok)
 
     # -- mask-aware cohort round: frozen-prefix split at a static cut --------
     def _cohort_update_masked_impl(self, params: PyTree, batches: PyTree,

@@ -50,6 +50,7 @@ from collections import deque
 
 import jax
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeout
 from typing import Any, Optional
 
 from repro.core.server import (FLServer, History, RoundRecord, SampledRound)
@@ -75,6 +76,7 @@ class RoundScheduler:
         self._next_plan = 0          # next round index to plan (rng order)
         self._selected_through = -1  # highest t whose select completed
         self._barrier = -1           # next unsaved checkpoint boundary
+        self._late = None            # (future, t) of a deadline-missed solve
 
     # -- host prefetch ----------------------------------------------------
     def _next_barrier(self, after: int, T: int) -> int:
@@ -112,6 +114,22 @@ class RoundScheduler:
             self._next_plan += 1
 
     # -- async select -----------------------------------------------------
+    def _join_late(self, block: bool) -> None:
+        """Join a deadline-missed solve (DESIGN.md §12).  The late solver
+        thread is still the store's single writer — once it lands, its
+        warm-row/stats-cache writes unblock the cache-dependent plans that
+        :meth:`_can_plan` kept gated on ``_selected_through``.  Called
+        non-blocking each iteration and blocking before a checkpoint save
+        (the barrier must capture a settled store)."""
+        if self._late is None:
+            return
+        fut, t_late = self._late
+        if not block and not fut.done():
+            return
+        fut.result()
+        self._selected_through = max(self._selected_through, t_late)
+        self._late = None
+
     def _select(self, plan, stats_dev):
         """Solver-thread body: materialise the probe stats (the pipeline's
         one device sync) and run the host selection.  Mutates only the
@@ -150,6 +168,7 @@ class RoundScheduler:
         try:
             for t in range(start, T):
                 t0 = time.time()  # repro: allow[nondeterminism] -- wall_s telemetry only, never an input to round math
+                self._join_late(block=False)
                 plan = sampled.plan
                 # the host solve (stats sync + (P1)) overlaps the in-flight
                 # device program *and* the prefetch below
@@ -157,8 +176,23 @@ class RoundScheduler:
                 # lookahead: sample rounds t+1..t+depth whose plans are
                 # cache-free while the solver thread works
                 self._prefetch(T, self.depth)
-                masks = masks_fut.result()
-                self._selected_through = t
+                if srv.solver_deadline_s is None:
+                    masks = masks_fut.result()
+                    self._selected_through = t
+                else:
+                    try:
+                        masks = masks_fut.result(
+                            timeout=srv.solver_deadline_s)
+                        self._selected_through = t
+                    except FutureTimeout:
+                        # degrade, don't stall: round t proceeds on the
+                        # warm-start rows while the solve finishes in the
+                        # background (read-only fallback — the solver
+                        # thread stays the store's single writer).
+                        # _selected_through is NOT bumped, so cache-
+                        # dependent plans stay gated until _join_late.
+                        masks = srv._fallback_rows(plan)
+                        self._late = (masks_fut, t)
                 # cache-dependent plans (selection_period > 1, non-refresh)
                 # unblock once select(t) has landed in the stats cache
                 self._prefetch(T, self.depth)
@@ -169,7 +203,16 @@ class RoundScheduler:
                 cut = srv._cut_for(masks)
                 nxt = self._queue[0] if self._queue else None
                 nstats = None
-                if fuse and nxt is not None and \
+                if srv._faults_active:
+                    # fault path (DESIGN.md §12): the guarded round step
+                    # replaces the fused/chained dispatch — ONE extra
+                    # compiled program, survivors/codes as runtime arrays
+                    params, losses = srv._update_round_faulty(
+                        params, sampled, masks)
+                    if nxt is not None and nxt.probe_batches is not None:
+                        nstats = client.probe_cohort_raw(
+                            params, nxt.probe_batches, reqs, score_fn)
+                elif fuse and nxt is not None and \
                         nxt.probe_batches is not None:
                     # round t+1's probe rides round t's update program
                     params, losses, nstats = client.probe_update_cohort_raw(
@@ -201,6 +244,7 @@ class RoundScheduler:
                     # queue here (no round past the boundary was planned),
                     # so syncing params + pending records captures exactly
                     # the synchronous loop's state after round t
+                    self._join_late(block=True)
                     for i in range(len(pending)):
                         if not isinstance(pending[i], RoundRecord):
                             pending[i] = srv._finalize(pending[i])

@@ -54,6 +54,7 @@ New code should construct servers through ``repro.api.Experiment``.
 """
 from __future__ import annotations
 
+import math
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -71,6 +72,7 @@ from repro.core.solver import greedy_rows
 from repro.core.state import (ClientStateStore, rng_state_from_arrays,
                               rng_state_to_arrays, sub_state)
 from repro.core.strategies import ProbeReport
+from repro.faults.injector import TransientFault, coerce_injector
 from repro.models.model import Model, supports_prefix_cut
 
 PyTree = Any
@@ -96,15 +98,29 @@ class RoundRecord:
 class History:
     records: list[RoundRecord] = field(default_factory=list)
 
+    @staticmethod
+    def _finite(r: RoundRecord) -> bool:
+        return all(math.isfinite(v)
+                   for v in (r.test_loss, r.test_acc, r.train_loss))
+
     def summary(self) -> dict:
+        """Aggregate stats over the run.  Rounds poisoned by a non-finite
+        loss/acc (e.g. an all-quarantined fault round) are *excluded* from
+        final/best aggregates — NaN would silently propagate through them
+        — and surfaced as ``nonfinite_rounds`` instead."""
         if not self.records:
             return {"final_loss": None, "final_acc": None, "best_acc": None,
-                    "rounds": 0, "uploaded_params_total": 0}
-        last = self.records[-1]
-        best_acc = max(r.test_acc for r in self.records)
-        return {"final_loss": last.test_loss, "final_acc": last.test_acc,
-                "best_acc": best_acc, "rounds": len(self.records),
-                "uploaded_params_total": sum(r.uploaded_params for r in self.records)}
+                    "rounds": 0, "uploaded_params_total": 0,
+                    "nonfinite_rounds": 0}
+        clean = [r for r in self.records if self._finite(r)]
+        last = clean[-1] if clean else None
+        return {"final_loss": last.test_loss if last else None,
+                "final_acc": last.test_acc if last else None,
+                "best_acc": max(r.test_acc for r in clean) if clean else None,
+                "rounds": len(self.records),
+                "uploaded_params_total": sum(r.uploaded_params
+                                             for r in self.records),
+                "nonfinite_rounds": len(self.records) - len(clean)}
 
     def selection_heatmap(self) -> np.ndarray:
         """(T, L) count of clients selecting each layer — Figure 2 analogue."""
@@ -175,9 +191,14 @@ class FLServer:
                  strategy: "Optional[Strategy | str]" = None,
                  mask_aware: Optional[bool] = None,
                  checkpoint_dir: Optional[str] = None,
-                 checkpoint_every: int = 10):
+                 checkpoint_every: int = 10,
+                 faults: "Optional[object]" = None,
+                 solver_deadline_s: Optional[float] = None):
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+        if solver_deadline_s is not None and solver_deadline_s <= 0:
+            raise ValueError(
+                f"solver_deadline_s must be > 0, got {solver_deadline_s}")
         if pipeline_depth < 1:
             raise ValueError(f"pipeline_depth must be >= 1, got {pipeline_depth}")
         if checkpoint_every < 1:
@@ -248,8 +269,20 @@ class FLServer:
         self._select_memo: Optional[tuple] = None
         self.select_stats = {"solves": 0, "memo_hits": 0,
                              "partial_warm_starts": 0,
-                             "all_straggler_rounds": 0}
+                             "all_straggler_rounds": 0,
+                             "quarantined_rows": 0, "dead_clients": 0,
+                             "solver_timeouts": 0, "dispatch_retries": 0,
+                             "ckpt_fallbacks": 0}
         self._straggler_warned = False
+        # fault injection + graceful degradation (DESIGN.md §12): a
+        # FaultPlan/FaultInjector (None = no injector).  A wired-but-
+        # disabled injector never touches the round path — bit-identical
+        # to no injector at all (tests/test_faults.py).
+        self._injector = coerce_injector(faults)
+        # optional *real* wall-clock deadline on the background (P1) solve
+        # (scheduler path only; best-effort by nature — the deterministic
+        # stall path is FaultPlan.stall_rate through select_round)
+        self.solver_deadline_s = solver_deadline_s
         # round-boundary checkpointing (None = off): state is saved every
         # checkpoint_every completed rounds and at the end of run()
         self.checkpoint_dir = checkpoint_dir
@@ -265,6 +298,34 @@ class FLServer:
     @property
     def needs_probe(self) -> bool:
         return bool(self._probe_reqs)
+
+    # -- fault machinery (DESIGN.md §12) ---------------------------------
+    @property
+    def _faults_active(self) -> bool:
+        return self._injector is not None and self._injector.enabled
+
+    def _dispatch(self, t: int, fn, *args):
+        """Run a round dispatch with bounded retry-with-backoff over
+        *injected* transient failures.  Only :class:`TransientFault`
+        retries — anything else is a real bug and propagates.  After
+        ``max_dispatch_retries`` exhausted retries the fault re-raises:
+        a permanently failing dispatch must kill the run loudly, not
+        degrade it silently."""
+        if not self._faults_active:
+            return fn(*args)
+        plan = self._injector.plan
+        attempt = 0
+        while True:
+            try:
+                self._injector.maybe_fail_dispatch(t, attempt)
+                return fn(*args)
+            except TransientFault:
+                attempt += 1
+                self.select_stats["dispatch_retries"] += 1
+                if attempt > plan.max_dispatch_retries:
+                    raise
+                if plan.retry_backoff_s > 0:
+                    time.sleep(plan.retry_backoff_s * (2 ** (attempt - 1)))
 
     # -- stage 1: plan ---------------------------------------------------
     def _budgets(self, cohort: np.ndarray) -> np.ndarray:
@@ -453,6 +514,11 @@ class FLServer:
                                                     plan.budgets))
         if not self.strategy.host:
             return self.strategy.select(probe, plan.budgets, ctx)
+        if self._faults_active and self._injector.solver_stalls(plan.t):
+            # injected solver stall: the (P1) solve missed its deadline —
+            # degrade to warm/greedy fallback masks instead of blocking
+            # the round (deterministic per (seed, t); engine-uniform)
+            return self._select_fallback(plan, probe)
         # the early exit only applies to strategies declaring their select
         # round-independent (Strategy.memoizable_select) — a custom host
         # strategy with e.g. an annealing schedule must never be replayed
@@ -469,6 +535,40 @@ class FLServer:
                 self._select_memo = (key, masks.copy())
         self.state.set_warm_rows(plan.cohort, masks, t=plan.t)
         return masks
+
+    def _select_fallback(self, plan: RoundPlan,
+                         probe: Optional[ProbeReport]) -> np.ndarray:
+        """Deadline-degraded masks: each member's previous converged mask
+        (warm row) where one exists, a greedy solve on this round's
+        utilities for unseen members, zeros (a forward-only round) when
+        neither is available.  The memo is invalidated — fallback masks
+        are not a solve output and must never be replayed as one — but
+        they DO become the next round's warm start, exactly like real
+        masks, so a recovered solver resumes from where degradation left
+        the cohort."""
+        self.select_stats["solver_timeouts"] += 1
+        rows, valid = self.state.warm_rows(plan.cohort)
+        if not valid.all() and probe is not None \
+                and probe.grad_sq_norms is not None:
+            G = np.asarray(probe.grad_sq_norms)
+            budgets = np.broadcast_to(np.asarray(plan.budgets), (len(rows),))
+            missing = np.flatnonzero(~valid)
+            rows[missing] = greedy_rows(G[missing], budgets[missing],
+                                        costs=self.layer_costs)
+        self._select_memo = None
+        self.state.set_warm_rows(plan.cohort, rows, t=plan.t)
+        return rows
+
+    def _fallback_rows(self, plan: RoundPlan) -> np.ndarray:
+        """Read-only fallback for the scheduler's *real* wall-clock
+        deadline (``solver_deadline_s``): warm rows where valid, zeros
+        elsewhere.  Deliberately touches no store/memo state — the late
+        solve is still running on the solver thread and remains the
+        single writer (RoundScheduler joins it before anything reads
+        what it wrote)."""
+        self.select_stats["solver_timeouts"] += 1
+        rows, _ = self.state.warm_rows(plan.cohort)
+        return rows
 
     def select_masks(self, params: PyTree, cohort: np.ndarray,
                      t: int) -> np.ndarray:
@@ -494,6 +594,8 @@ class FLServer:
     def update_round(self, params: PyTree, sampled: SampledRound,
                      masks: np.ndarray) -> tuple[PyTree, np.ndarray]:
         fl, plan = self.fl, sampled.plan
+        if self._faults_active:
+            return self._update_round_faulty(params, sampled, masks)
         if self.engine == "vectorized":
             return self.client.cohort_update(params, sampled.update_batches,
                                              masks, plan.sizes, fl.lr,
@@ -508,6 +610,97 @@ class FLServer:
             losses.append(loss)
         update = agg.aggregate(deltas, masks, plan.sizes, self.model.cfg)
         return agg.apply_update(params, update, fl.lr), np.asarray(losses)
+
+    # -- stage 5, fault path (DESIGN.md §12) ------------------------------
+    def _update_round_faulty(self, params: PyTree, sampled: SampledRound,
+                             masks: np.ndarray
+                             ) -> tuple[PyTree, np.ndarray]:
+        """The round step with the injector live: mid-round client death
+        (survivor-reweighted Eq.(7)), injected delta corruption, and the
+        finite guard that quarantines poisoned rows before they touch the
+        global params.  The vectorized engine runs the ONE guarded jitted
+        variant (``cohort_update_guarded`` — survivors/codes are runtime
+        arrays, no per-fault recompiles); the sequential engine is the
+        survivors-only oracle the parity tests compare against.  Reported
+        ``losses`` cover the rows that actually aggregated (``[nan]``
+        when the whole cohort died — the record surfaces the poisoned
+        round instead of faking a finite loss)."""
+        fl, plan = self.fl, sampled.plan
+        inj = self._injector
+        fp = inj.plan
+        survivors, codes = inj.round_faults(plan.t, len(plan.cohort))
+        if self.engine == "vectorized":
+            params, losses, ok = self._dispatch(
+                plan.t, self.client.cohort_update_guarded, params,
+                sampled.update_batches, masks, plan.sizes, fl.lr,
+                survivors, codes, fp.explode_scale, fp.max_delta_sq)
+        else:
+            params, losses, ok = self._dispatch(
+                plan.t, self._sequential_guarded, params, sampled, masks,
+                survivors, codes)
+        self._account_faults(survivors, ok)
+        kept = np.asarray(losses)[np.asarray(ok) > 0]
+        return params, (kept if kept.size
+                        else np.asarray([np.nan], np.float32))
+
+    def _sequential_guarded(self, params: PyTree, sampled: SampledRound,
+                            masks: np.ndarray, survivors: np.ndarray,
+                            codes: np.ndarray
+                            ) -> tuple[PyTree, np.ndarray, np.ndarray]:
+        """Paper-literal fault oracle: per-client updates, host-side
+        corruption + finite guard, then Eq.(5)-(7) over exactly the
+        surviving finite rows — the ground truth the guarded vectorized
+        program must match (tests/test_faults.py parity (c))."""
+        fl, plan = self.fl, sampled.plan
+        fp = self._injector.plan
+        deltas, losses = [], []
+        for row in range(len(plan.cohort)):
+            batches = jax.tree.map(lambda x, row=row: x[row],
+                                   sampled.update_batches)
+            delta, loss = self.client.local_update(params, batches,
+                                                   masks[row], fl.lr)
+            deltas.append(delta)
+            losses.append(loss)
+        ok = np.asarray(survivors, np.float32).copy()
+        for i, code in enumerate(np.asarray(codes, np.int32)):
+            if code:
+                deltas[i] = self._corrupt_host(deltas[i], int(code),
+                                               fp.explode_scale)
+            finite, sq = True, np.float32(0.0)
+            for leaf in jax.tree.leaves(deltas[i]):
+                a = np.asarray(leaf, np.float32)  # repro: allow[host-sync] -- the sequential oracle is host-side by definition
+                finite = finite and bool(np.isfinite(a).all())
+                sq = np.float32(sq + a.astype(np.float32).ravel().dot(
+                    a.astype(np.float32).ravel()))
+            if not finite or not sq <= fp.max_delta_sq:
+                ok[i] = 0.0
+        idx = np.flatnonzero(ok > 0)
+        if idx.size:                     # all-quarantined round: θ unchanged
+            update = agg.aggregate([deltas[i] for i in idx],
+                                   np.asarray(masks)[idx], plan.sizes[idx],
+                                   self.model.cfg)
+            params = agg.apply_update(params, update, fl.lr)
+        return params, np.asarray(losses), ok
+
+    @staticmethod
+    def _corrupt_host(delta: PyTree, code: int, scale: float) -> PyTree:
+        """Host twin of ``aggregation.corrupt_delta_rows`` for one client's
+        delta tree (sequential oracle)."""
+        if code == 3:
+            return jax.tree.map(
+                lambda x: np.asarray(x, np.float32) * np.float32(scale),
+                delta)
+        fill = np.nan if code == 1 else np.inf
+        return jax.tree.map(
+            lambda x: np.full_like(np.asarray(x, np.float32), fill), delta)
+
+    def _account_faults(self, survivors: np.ndarray,
+                        ok: np.ndarray) -> None:
+        survivors = np.asarray(survivors)
+        ok = np.asarray(ok)  # repro: allow[host-sync] -- fault accounting at the round boundary (sanctioned sync)
+        self.select_stats["dead_clients"] += int((survivors <= 0).sum())
+        self.select_stats["quarantined_rows"] += int(
+            ((ok <= 0) & (survivors > 0)).sum())
 
     # -- stage 6: eval + record ------------------------------------------
     def _ensure_layer_params(self, params: PyTree) -> None:
@@ -567,7 +760,10 @@ class FLServer:
             tree["task"] = task_sd()
         extra = {"round": t_next, "history": history.to_json(),
                  "select_stats": dict(self.select_stats)}
-        return save_checkpoint(self.checkpoint_dir, t_next, tree, extra=extra)
+        path = save_checkpoint(self.checkpoint_dir, t_next, tree, extra=extra)
+        if self._faults_active:          # post-save media damage (DESIGN.md §12)
+            self._injector.maybe_corrupt_checkpoint(path, t_next)
+        return path
 
     def restore_state(self, params_template: PyTree,
                       step: Optional[int] = None
@@ -578,12 +774,28 @@ class FLServer:
         checkpoint dir is unset/empty.  Params restore strictly against the
         template (shape-checked); store/rng/task namespaces restore
         byte-exact, so ``run(params, start=completed_rounds)`` continues
-        bit-identically on masks."""
-        from repro.ckpt import (latest_step, load_checkpoint_arrays,
+        bit-identically on masks.
+
+        Self-healing (DESIGN.md §12): with no explicit ``step``, the scan
+        verifies manifests + per-array checksums newest-first and resumes
+        from the latest *intact* checkpoint, counting the fallback in
+        ``select_stats["ckpt_fallbacks"]`` and warning with the skipped
+        steps.  An explicit ``step`` is trusted as asked-for (corruption
+        there surfaces as the underlying load error)."""
+        from repro.ckpt import (latest_intact_step, load_checkpoint_arrays,
                                 restore_checkpoint)
         if self.checkpoint_dir is None:
             return None
-        step = latest_step(self.checkpoint_dir) if step is None else step
+        fell_back = False
+        if step is None:
+            step, skipped = latest_intact_step(self.checkpoint_dir)
+            if skipped:
+                fell_back = True
+                detail = "; ".join(f"step {s}: {why}" for s, why in skipped)
+                warnings.warn(
+                    f"skipping corrupt checkpoint(s) [{detail}]; resuming "
+                    f"from {'step %d' % step if step is not None else 'scratch'}",
+                    RuntimeWarning, stacklevel=2)
         if step is None:
             return None
         restored, _ = restore_checkpoint(self.checkpoint_dir,
@@ -598,6 +810,8 @@ class FLServer:
         self._select_memo = None         # value-safe to drop (see __init__)
         extra = manifest["extra"]
         self.select_stats.update(extra.get("select_stats", {}))
+        if fell_back:                    # after the update: the restored
+            self.select_stats["ckpt_fallbacks"] += 1   # dict must not clobber it
         return (restored["params"], int(extra["round"]),
                 History.from_json(extra["history"]))
 

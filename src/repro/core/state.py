@@ -214,7 +214,7 @@ class ClientStateStore:
     def warm_rows(self, cohort) -> tuple[np.ndarray, np.ndarray]:
         """(rows (k, L) float32, valid (k,) bool) for the cohort's ids.
         Rows are fresh copies; invalid rows are zeros."""
-        ids = np.asarray(cohort, np.int64)
+        ids = np.asarray(cohort, np.int64)  # repro: allow[host-sync] -- cohort ids are host np; the store is host-resident by design
         return self._warm[ids].copy(), self._warm_valid[ids].copy()
 
     def set_warm_rows(self, cohort, masks: np.ndarray,

@@ -1,0 +1,19 @@
+"""Deterministic fault injection + the degradation contracts (DESIGN.md §12).
+
+``repro.faults`` is the chaos seam of the round engines and the serve
+loop: a :class:`FaultPlan` declares *rates* for each fault class, a
+:class:`FaultInjector` turns them into concrete per-round draws from its
+own seeded rng streams, and the engines consult the injector at fixed
+sites (client death after sampling, delta corruption before aggregation,
+solver stalls, dispatch failures, checkpoint corruption, serve-side
+upload/slot failures).  ``Experiment(faults=...)`` wires it in.
+
+Wired-but-disabled injectors are contractually free: every hook
+short-circuits before touching an rng, so a run with
+``FaultPlan(enabled=False)`` is bit-identical to one with no injector at
+all (tests/test_faults.py, BENCH_fault_overhead.json).
+"""
+from repro.faults.injector import (CORRUPT_CODES,  # noqa: F401
+                                   FaultInjector, FaultPlan, TransientFault)
+
+__all__ = ["CORRUPT_CODES", "FaultInjector", "FaultPlan", "TransientFault"]

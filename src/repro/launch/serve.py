@@ -57,7 +57,9 @@ class SlotServer:
 
     def __init__(self, model: Model, params, slots: int, max_seq: int,
                  window: int = 0, *, mode: str = "shared",
-                 store: Optional[DeltaStore] = None, capacity: int = 0):
+                 store: Optional[DeltaStore] = None, capacity: int = 0,
+                 admit_retries: int = 16, max_slot_retries: int = 2,
+                 injector=None):
         assert mode in ("shared", "delta", "dense"), mode
         if mode != "shared" and store is None:
             raise ValueError(f"mode={mode!r} needs a DeltaStore")
@@ -71,6 +73,18 @@ class SlotServer:
         self.suite = serve_suite(model)
         self.active: list[Request | None] = [None] * slots
         self.pos = np.zeros(slots, np.int32)        # per-slot position
+        # degradation policy (DESIGN.md §12): a request that cannot admit
+        # after admit_retries attempts, or whose slot is struck more than
+        # max_slot_retries times, is dropped (self.dropped) instead of
+        # livelocking the loop / killing the batch
+        self.admit_retries = int(admit_retries)
+        self.max_slot_retries = int(max_slot_retries)
+        self.injector = injector
+        self.dropped: list[Request] = []
+        self._admit_attempts: dict[int, int] = {}   # rid -> failed admits
+        self._fail_counts: dict[int, int] = {}      # rid -> slot strikes
+        self._dropped_requests = 0
+        self._slot_failures = 0
         if mode == "dense":
             # stacked per-slot state: private params + a batch-1 cache per slot
             self.bank = stack_tree(params, slots)
@@ -80,7 +94,8 @@ class SlotServer:
         else:
             self.cache = model.init_cache(slots, max_seq, window=window,
                                           per_slot=True)
-            self.overlay = (DeltaOverlay(model, capacity or slots)
+            self.overlay = (DeltaOverlay(model, capacity or slots,
+                                         injector=injector)
                             if mode == "delta" else None)
 
     def _record(self, req: Request):
@@ -93,15 +108,40 @@ class SlotServer:
         if self.mode == "delta":
             self.overlay.release(i)
 
+    def _drop(self, req: Request, why: str) -> None:
+        self.dropped.append(req)
+        self._dropped_requests += 1
+        self._admit_attempts.pop(req.rid, None)
+        self._fail_counts.pop(req.rid, None)
+        print(f"  dropping request {req.rid} (user {req.user_id}): {why}")
+
     def _admit(self, queue: list[Request]):
         for i in range(self.slots):
             if self.active[i] is not None or not queue:
                 continue
-            req = queue[0]
             if self.mode == "delta":
-                if not self.overlay.try_admit(i, self._record(req)):
-                    continue        # overlay full; retry after a release
-            queue.pop(0)
+                req = None
+                while queue:
+                    head = queue[0]
+                    if self.overlay.try_admit(i, self._record(head)):
+                        req = queue.pop(0)
+                        break
+                    # overlay full for this request: bounded retry, then
+                    # drop — the old unconditional requeue livelocked the
+                    # loop when the head request could never fit
+                    n = self._admit_attempts.get(head.rid, 0) + 1
+                    self._admit_attempts[head.rid] = n
+                    if n > self.admit_retries:
+                        queue.pop(0)
+                        self._drop(head, f"no overlay capacity after "
+                                         f"{n - 1} admit attempts")
+                        continue    # head dropped: try the next request
+                    break           # keep queued; retry after a release
+                if req is None:
+                    continue        # nothing admissible for this slot now
+            else:
+                req = queue.pop(0)
+            self._admit_attempts.pop(req.rid, None)
             if self.mode == "dense":
                 private = (self.store.materialize(self.params, req.user_id)
                            if req.user_id >= 0 else self.params)
@@ -134,10 +174,11 @@ class SlotServer:
         while queue or any(r is not None for r in self.active):
             self._admit(queue)
             if queue and all(r is None for r in self.active):
-                raise RuntimeError(
-                    f"request {queue[0].rid} (user {queue[0].user_id}) "
-                    f"exceeds overlay capacity even on an idle server — "
-                    f"raise --delta-capacity")
+                # nothing admitted onto an idle server: skip the decode —
+                # admit attempts ramp every pass, so the stuck head is
+                # dropped within admit_retries iterations (no livelock,
+                # no RuntimeError: the batch degrades instead of dying)
+                continue
             toks = np.zeros(self.slots, np.int32)
             for i, r in enumerate(self.active):
                 if r is None:
@@ -161,13 +202,34 @@ class SlotServer:
                 if r.done or self.pos[i] >= self.max_seq - 1:
                     done.append(r)
                     self._free(i)
+            if self.injector is not None and self.injector.enabled:
+                # injected slot failures (DESIGN.md §12): the struck slot's
+                # request loses its progress; bounded per-request retries
+                # from scratch (generated cleared — admit resets pos/cache),
+                # then dropped
+                struck = self.injector.slot_faults(steps, self.slots)
+                for i in np.flatnonzero(struck):
+                    r = self.active[i]
+                    if r is None:
+                        continue
+                    self._slot_failures += 1
+                    self._free(int(i))  # repro: allow[host-sync] -- i is a host np index from the injector's host draw
+                    n = self._fail_counts.get(r.rid, 0) + 1
+                    self._fail_counts[r.rid] = n
+                    if n > self.max_slot_retries:
+                        self._drop(r, f"slot failed {n} times")
+                    else:
+                        r.generated.clear()
+                        queue.append(r)
             if verbose and steps % 8 == 0:
                 print(f"  step {steps}: {sum(x is not None for x in self.active)}"
                       f" active, {len(queue)} queued, {len(done)} done")
         dt = time.time() - t0  # repro: allow[nondeterminism] -- serve wall-clock telemetry only
         gen = sum(len(r.generated) for r in done)
         return done, {"steps": steps, "wall_s": dt, "gen_tokens": gen,
-                      "tok_per_s": gen / dt if dt > 1e-9 else 0.0}
+                      "tok_per_s": gen / dt if dt > 1e-9 else 0.0,
+                      "dropped_requests": self._dropped_requests,
+                      "slot_failures": self._slot_failures}
 
 
 def demo_store(model: Model, params, users: int, layers_per_user: int,

@@ -40,9 +40,18 @@ def _write_entry(leaves: dict, l, c, rows: dict) -> dict:
 
 
 class DeltaOverlay:
-    """Capacity-C per-layer delta entries over the scanned ``blocks`` stack."""
+    """Capacity-C per-layer delta entries over the scanned ``blocks`` stack.
 
-    def __init__(self, model: Model, capacity: int):
+    ``injector`` (a ``repro.faults.FaultInjector``, optional) makes entry
+    uploads failable: each write retries up to ``max_upload_retries``
+    times on :class:`TransientFault`; a permanently failed upload rolls
+    the already-written entries back (owner ids cleared — the kernel masks
+    the stale rows) and the admit reports False with
+    ``stats["failed_admits"]`` bumped, so a fault never leaves a
+    half-admitted user visible to the decode."""
+
+    def __init__(self, model: Model, capacity: int, *,
+                 injector=None, max_upload_retries: int = 3):
         if not supports_delta_decode(model.cfg):
             raise ValueError(
                 f"family {model.cfg.family!r} has no delta-decode path")
@@ -57,6 +66,10 @@ class DeltaOverlay:
         self._slots_dev = jnp.asarray(self.slot_ids)
         self._dirty = False
         self._write = jax.jit(_write_entry, donate_argnums=0)
+        self.injector = injector
+        self.max_upload_retries = int(max_upload_retries)
+        self.stats = {"upload_retries": 0, "failed_admits": 0}
+        self._upload_seq = 0     # monotone entry-write counter (fault lane)
 
     @property
     def n_entries(self) -> int:
@@ -89,14 +102,45 @@ class DeltaOverlay:
             plan.append((li, int(free[0])))  # repro: allow[host-sync] -- host np slot bookkeeping (admission time)
         ent = []
         for j, (li, c) in enumerate(plan):
-            rows = {name: jnp.asarray(leaves[name][j]) for name in self.leaves}
-            self.leaves = self._write(self.leaves, jnp.int32(li),
-                                      jnp.int32(c), rows)
+            if not self._upload_entry(j, li, c, leaves):
+                # permanent upload failure: roll back this admit's already-
+                # written entries (owner -1 masks the stale leaf rows —
+                # same O(1) trick as release) so no partial user is visible
+                for rli, rc in ent:
+                    self.slot_ids[rli, rc] = -1
+                self.entries[slot] = []
+                self._dirty = True
+                self.stats["failed_admits"] += 1
+                return False
             self.slot_ids[li, c] = slot
             ent.append((li, c))
         self.entries[slot] = ent
         self._dirty = True
         return True
+
+    def _upload_entry(self, j: int, li: int, c: int, leaves: dict) -> bool:
+        """One entry write with bounded fault retry.  The injected failure
+        fires BEFORE the donating write, so a failed attempt consumes no
+        buffer and the retry re-reads intact overlay leaves."""
+        from repro.faults.injector import TransientFault
+        attempt = 0
+        while True:
+            seq = self._upload_seq
+            self._upload_seq += 1
+            try:
+                if self.injector is not None and self.injector.enabled:
+                    self.injector.maybe_fail_upload(seq)
+            except TransientFault:
+                attempt += 1
+                if attempt > self.max_upload_retries:
+                    return False
+                self.stats["upload_retries"] += 1
+                continue
+            rows = {name: jnp.asarray(leaves[name][j])
+                    for name in self.leaves}
+            self.leaves = self._write(self.leaves, jnp.int32(li),
+                                      jnp.int32(c), rows)
+            return True
 
     def release(self, slot: int) -> None:
         for li, c in self.entries.pop(slot, []):

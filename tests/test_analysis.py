@@ -25,10 +25,11 @@ def rules_hit(findings):
 
 
 def test_rules_registered():
-    assert len(RULES) >= 7
+    assert len(RULES) >= 8
     assert set(RULES) >= {"jit-outside-cache", "host-sync", "nondeterminism",
                           "tracer-hazard", "unhashable-static",
-                          "kernel-parity", "donation-miss"}
+                          "kernel-parity", "donation-miss",
+                          "exception-swallow"}
 
 
 # -- jit-outside-cache -------------------------------------------------------
@@ -295,6 +296,67 @@ def test_donation_miss_pragma_escape(tmp_path):
             return params
         f = jax.jit(step)  # repro: allow[donation-miss] -- params shared across slots
         """}, config=DON_CFG, only=["donation-miss"])
+    assert not out
+
+
+# -- exception-swallow -------------------------------------------------------
+
+SWALLOW_CFG = AnalysisConfig(swallow_scope=("core/",))
+
+
+def test_exception_swallow_bad(tmp_path):
+    out = lint(tmp_path, {"core/a.py": """
+        def load(path):
+            try:
+                return open(path).read()
+            except:
+                return None
+
+        def tick(items):
+            for x in items:
+                try:
+                    x.step()
+                except Exception:
+                    pass
+        """}, config=SWALLOW_CFG, only=["exception-swallow"])
+    assert [f.rule for f in out] == ["exception-swallow"] * 2
+    assert {f.line for f in out} == {5, 12}
+
+
+def test_exception_swallow_good(tmp_path):
+    out = lint(tmp_path, {"core/b.py": """
+        import shutil
+
+        def save(tmp):
+            try:
+                return write(tmp)
+            except Exception:
+                shutil.rmtree(tmp, ignore_errors=True)
+                raise
+
+        def verify(path):
+            try:
+                return parse(path), "ok"
+            except (OSError, ValueError) as e:
+                return None, str(e)
+
+        def load(z):
+            try:
+                return z.read()
+            except Exception as e:
+                return None  # repro: allow[exception-swallow] -- verdict returned to caller
+        """}, config=SWALLOW_CFG, only=["exception-swallow"])
+    assert not out
+
+
+def test_exception_swallow_outside_scope_ignored(tmp_path):
+    out = lint(tmp_path, {"tools/c.py": """
+        def f():
+            try:
+                g()
+            except Exception:
+                pass
+        """}, config=SWALLOW_CFG, only=["exception-swallow"])
     assert not out
 
 

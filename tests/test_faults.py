@@ -1,0 +1,611 @@
+"""Fault-injection harness + graceful degradation (DESIGN.md §12).
+
+The degradation parity matrix the fault PR promises:
+
+(a) injector wired but disabled ⇒ bit-identical masks/params/History to
+    the injector-free path, both engines, pipeline depths 1 and 4;
+(b) same fault seed ⇒ identical History and select_stats across runs
+    (fault schedules are replayable);
+(c) mid-round client death ⇒ the survivor-reweighted vectorized program
+    matches the sequential oracle run over the survivors only;
+(d) corrupted latest checkpoint ⇒ auto-resume from the previous intact
+    step completes the run.
+
+Plus the degradation policies themselves: all-quarantined rounds leave
+params bit-exact and surface as ``nonfinite_rounds``, solver stalls fall
+back to warm/greedy masks, dispatch failures retry boundedly, checkpoint
+damage of every kind is detected, plan-stage chaos (empty pools,
+all-straggler rounds) degrades per contract, and the serve loop drops
+instead of livelocking.
+"""
+import math
+import os
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import ChaosTask, Experiment
+from repro.api.task import DirichletTaskConfig, DirichletTokenMixtureTask
+from repro.configs.base import FLConfig, RuntimeConfig, get_arch, reduced
+from repro.core import client as client_mod
+from repro.core.server import FLServer, History, RoundRecord
+from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
+from repro.faults import CORRUPT_CODES, FaultInjector, FaultPlan, TransientFault
+from repro.faults.injector import CKPT_CORRUPT_KINDS
+from repro.models.model import Model
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = reduced(get_arch("xlm_roberta_base"), n_layers=2, d_model=32)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    task = FederatedTaskConfig(n_clients=8, n_classes=10,
+                               vocab_size=cfg.vocab_size, seq_len=8,
+                               samples_per_client=16, skew="label",
+                               objective="classification")
+    return model, params, task
+
+
+def _fl(**kw):
+    base = dict(n_clients=8, cohort_size=3, rounds=4, local_steps=2,
+                lr=0.01, batch_size=4, strategy="ours", budget=1, lam=1.0,
+                seed=0)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+CHAOS = dict(seed=5, death_rate=0.4, corrupt_rate=0.4,
+             corrupt_kinds=("nan", "inf"))
+
+
+def _records_equal(h_a, h_b, atol=1e-5, bitwise=False):
+    """NaN-aware record comparison (wall_s excluded — host telemetry)."""
+    assert len(h_a.records) == len(h_b.records)
+    for ra, rb in zip(h_a.records, h_b.records):
+        np.testing.assert_array_equal(ra.cohort, rb.cohort)
+        np.testing.assert_array_equal(ra.mask_matrix, rb.mask_matrix)
+        assert ra.uploaded_params == rb.uploaded_params
+        for fld in ("train_loss", "test_loss", "test_acc"):
+            va, vb = getattr(ra, fld), getattr(rb, fld)
+            if math.isnan(va) or math.isnan(vb):
+                assert math.isnan(va) and math.isnan(vb), (fld, va, vb)
+            elif bitwise:
+                assert va == vb, (fld, va, vb)
+            else:
+                assert va == pytest.approx(vb, abs=atol), (fld, va, vb)
+
+
+def _params_equal(p_a, p_b):
+    for a, b in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _params_close(p_a, p_b, atol=1e-5):
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(np.abs(np.asarray(a, np.float32)
+                                  - np.asarray(b, np.float32)).max()),
+        p_a, p_b)))
+    assert err < atol, f"param divergence {err}"
+
+
+# ---------------------------------------------------------------------------
+# (a) wired-but-disabled is contractually free
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine,depth", [("vectorized", 1),
+                                          ("vectorized", 4),
+                                          ("sequential", 1)])
+def test_disabled_injector_bit_identical(world, engine, depth):
+    model, params, task = world
+    disabled = FaultPlan(enabled=False, **CHAOS)
+    p_none, h_none = FLServer(
+        model, _fl(), SyntheticFederatedData(task), engine=engine,
+        pipeline_depth=depth).run(params)
+    p_off, h_off = FLServer(
+        model, _fl(), SyntheticFederatedData(task), engine=engine,
+        pipeline_depth=depth, faults=disabled).run(params)
+    _records_equal(h_none, h_off, bitwise=True)
+    _params_equal(p_none, p_off)
+
+
+def test_disabled_injector_draws_nothing():
+    inj = FaultInjector(FaultPlan(enabled=False, death_rate=1.0,
+                                  corrupt_rate=1.0, stall_rate=1.0,
+                                  dispatch_fail_rate=1.0))
+    survivors, codes = inj.round_faults(0, 5)
+    np.testing.assert_array_equal(survivors, np.ones(5, np.float32))
+    np.testing.assert_array_equal(codes, np.zeros(5, np.int32))
+    assert not inj.solver_stalls(0)
+    assert inj.dispatch_failures(0) == 0
+    inj.maybe_fail_dispatch(0, 0)        # must not raise
+    assert all(v == 0 for v in inj.stats.values())
+
+
+# ---------------------------------------------------------------------------
+# (b) same fault seed ⇒ identical replay
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine,depth", [("vectorized", 1),
+                                          ("vectorized", 4),
+                                          ("sequential", 1)])
+def test_fault_schedule_replays_deterministically(world, engine, depth):
+    model, params, task = world
+    runs = []
+    for _ in range(2):
+        srv = FLServer(model, _fl(), SyntheticFederatedData(task),
+                       engine=engine, pipeline_depth=depth,
+                       faults=FaultPlan(**CHAOS))
+        p, h = srv.run(params)
+        runs.append((p, h, dict(srv.select_stats),
+                     dict(srv._injector.stats)))
+    _records_equal(runs[0][1], runs[1][1], bitwise=True)
+    _params_equal(runs[0][0], runs[1][0])
+    assert runs[0][2] == runs[1][2]
+    assert runs[0][3] == runs[1][3]
+    assert runs[0][2]["dead_clients"] > 0        # chaos actually happened
+
+
+def test_fault_draws_independent_of_call_order():
+    """Per-(site, round) rng lanes: drawing round 3 before round 0, or
+    skipping sites entirely, never changes what a round sees."""
+    a, b = (FaultInjector(FaultPlan(seed=9, death_rate=0.5,
+                                    corrupt_rate=0.5)) for _ in range(2))
+    fwd = [a.round_faults(t, 6) for t in range(4)]
+    a_stalls = [a.solver_stalls(t) for t in range(4)]
+    rev = [b.round_faults(t, 6) for t in reversed(range(4))][::-1]
+    for (s1, c1), (s2, c2) in zip(fwd, rev):
+        np.testing.assert_array_equal(s1, s2)
+        np.testing.assert_array_equal(c1, c2)
+    assert a_stalls == [b.solver_stalls(t) for t in range(4)]
+
+
+# ---------------------------------------------------------------------------
+# (c) survivor-reweighted aggregation matches the survivors-only oracle
+# ---------------------------------------------------------------------------
+
+def test_guarded_engines_agree_under_faults(world):
+    model, params, task = world
+    outs = []
+    for engine in ("vectorized", "sequential"):
+        srv = FLServer(model, _fl(), SyntheticFederatedData(task),
+                       engine=engine, faults=FaultPlan(**CHAOS))
+        outs.append(srv.run(params))
+    _records_equal(outs[0][1], outs[1][1], atol=2e-4)
+    _params_close(outs[0][0], outs[1][0], atol=2e-4)
+
+
+def test_client_death_matches_survivor_subset_oracle(world):
+    """Death only (no corruption): the guarded program's params must equal
+    the plain dense round run over exactly the surviving rows."""
+    model, params, task = world
+    srv = FLServer(model, _fl(), SyntheticFederatedData(task))
+    plan = srv.plan_round(0)
+    sampled = srv.sample_round(plan)
+    stats = srv.probe_round(params, sampled)
+    masks = srv.select_round(plan, stats)
+    n = len(plan.cohort)
+    survivors = np.ones(n, np.float32)
+    survivors[0] = 0.0                       # kill the first cohort member
+    codes = np.zeros(n, np.int32)
+
+    p_guard, _, ok = srv.client.cohort_update_guarded(
+        params, sampled.update_batches, masks, plan.sizes, srv.fl.lr,
+        survivors, codes, 1e30, math.inf)
+    np.testing.assert_array_equal(ok, survivors)
+
+    idx = np.flatnonzero(survivors > 0)
+    sub_batches = jax.tree.map(lambda x: np.asarray(x)[idx],
+                               sampled.update_batches)
+    p_ref, _ = srv.client.cohort_update(
+        params, sub_batches, masks[idx], plan.sizes[idx], srv.fl.lr)
+    _params_close(p_guard, p_ref, atol=1e-5)
+
+
+def test_all_quarantined_round_leaves_params_bitexact(world):
+    """Everyone reports NaN: zero rows aggregate, θ − η·0 = θ exactly, and
+    the round's losses surface as NaN instead of a fake finite value."""
+    model, params, task = world
+    srv = FLServer(model, _fl(), SyntheticFederatedData(task),
+                   faults=FaultPlan(seed=1, corrupt_rate=1.0,
+                                    corrupt_kinds=("nan",)))
+    plan = srv.plan_round(0)
+    sampled = srv.sample_round(plan)
+    masks = srv.select_round(plan, srv.probe_round(params, sampled))
+    new_params, losses = srv.update_round(params, sampled, masks)
+    _params_equal(new_params, params)
+    assert np.isnan(losses).all()
+    assert srv.select_stats["quarantined_rows"] == len(plan.cohort)
+
+
+def test_norm_threshold_quarantines_exploding_rows(world):
+    model, params, task = world
+    srv = FLServer(model, _fl(), SyntheticFederatedData(task),
+                   faults=FaultPlan(seed=2, corrupt_rate=1.0,
+                                    corrupt_kinds=("explode",),
+                                    explode_scale=1e6, max_delta_sq=1.0))
+    plan = srv.plan_round(0)
+    sampled = srv.sample_round(plan)
+    masks = srv.select_round(plan, srv.probe_round(params, sampled))
+    new_params, _ = srv.update_round(params, sampled, masks)
+    _params_equal(new_params, params)    # every row over threshold
+
+
+# ---------------------------------------------------------------------------
+# solver stalls + dispatch failures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [1, 4])
+def test_solver_stall_falls_back_and_completes(world, depth):
+    model, params, task = world
+    srv = FLServer(model, _fl(), SyntheticFederatedData(task),
+                   pipeline_depth=depth,
+                   faults=FaultPlan(seed=3, stall_rate=1.0))
+    _, hist = srv.run(params)
+    assert len(hist.records) == srv.fl.rounds
+    assert srv.select_stats["solver_timeouts"] == srv.fl.rounds
+    assert srv._injector.stats["stalls"] == srv.fl.rounds
+
+
+def test_dispatch_retry_recovers(world):
+    model, params, task = world
+    srv = FLServer(model, _fl(), SyntheticFederatedData(task),
+                   faults=FaultPlan(seed=4, dispatch_fail_rate=1.0,
+                                    dispatch_fail_count=2,
+                                    max_dispatch_retries=3))
+    _, hist = srv.run(params)
+    assert len(hist.records) == srv.fl.rounds
+    # 2 failed attempts per round, then success
+    assert srv.select_stats["dispatch_retries"] == 2 * srv.fl.rounds
+
+
+def test_dispatch_retry_exhaustion_raises(world):
+    model, params, task = world
+    srv = FLServer(model, _fl(), SyntheticFederatedData(task),
+                   faults=FaultPlan(seed=4, dispatch_fail_rate=1.0,
+                                    dispatch_fail_count=5,
+                                    max_dispatch_retries=2))
+    with pytest.raises(TransientFault):
+        srv.run(params)
+
+
+def test_real_solver_deadline_degrades(world):
+    """A wall-clock deadline the solve cannot meet: the round proceeds on
+    the warm-start fallback and the run still completes every round."""
+    model, params, task = world
+    srv = FLServer(model, _fl(), SyntheticFederatedData(task),
+                   pipeline_depth=2, solver_deadline_s=1e-9)
+    _, hist = srv.run(params)
+    assert len(hist.records) == srv.fl.rounds
+    assert srv.select_stats["solver_timeouts"] > 0
+
+
+# ---------------------------------------------------------------------------
+# (d) self-healing checkpoints
+# ---------------------------------------------------------------------------
+
+def _experiment(model_cfg, task, ckpt_dir, rounds, **kw):
+    return Experiment(
+        Model(model_cfg, RuntimeConfig(remat=False, seq_chunk=16)), task,
+        strategy="ours", cohort_size=3, rounds=rounds, local_steps=2,
+        lr=0.01, batch_size=4, budget=1, lam=1.0, seed=0,
+        checkpoint_dir=ckpt_dir, checkpoint_every=2, **kw)
+
+
+def _dirichlet_task():
+    return DirichletTokenMixtureTask(DirichletTaskConfig(
+        n_clients=8, n_topics=4, vocab_size=128, seq_len=8,
+        samples_per_client=16, test_samples=32, seed=0))
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return reduced(get_arch("xlm_roberta_base"), n_layers=2, d_model=32)
+
+
+@pytest.mark.parametrize("kind", CKPT_CORRUPT_KINDS)
+def test_corrupt_latest_checkpoint_auto_resumes(small_cfg, tmp_path, kind):
+    ckpt = str(tmp_path / "ckpt")
+    exp = _experiment(small_cfg, _dirichlet_task(), ckpt, rounds=6)
+    params0 = exp.init_params()
+    _, h_first = exp.run(params0, rounds=6)
+    assert len(h_first.records) == 6
+
+    # damage the newest checkpoint (step 6), leaving step 4 intact
+    FaultInjector.corrupt_checkpoint_dir(
+        os.path.join(ckpt, "step_00000006"), kind)
+
+    exp2 = _experiment(small_cfg, _dirichlet_task(), ckpt, rounds=8)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        params, hist = exp2.run(params0, rounds=8)
+    assert any("corrupt checkpoint" in str(w.message) for w in caught)
+    assert exp2.server.select_stats["ckpt_fallbacks"] == 1
+    assert len(hist.records) == 8
+    # the resumed prefix is the restored step-4 history: rounds 0..3
+    assert [r.round for r in hist.records] == list(range(8))
+
+    # and it matches an uninterrupted 8-round run on masks/cohorts
+    ref = _experiment(small_cfg, _dirichlet_task(),
+                      str(tmp_path / "ref"), rounds=8)
+    _, h_ref = ref.run(params0, rounds=8)
+    _records_equal(hist, h_ref)
+
+
+def test_all_checkpoints_corrupt_resumes_from_scratch(small_cfg, tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    exp = _experiment(small_cfg, _dirichlet_task(), ckpt, rounds=4)
+    params0 = exp.init_params()
+    exp.run(params0, rounds=4)
+    for d in os.listdir(ckpt):
+        if d.startswith("step_"):
+            FaultInjector.corrupt_checkpoint_dir(
+                os.path.join(ckpt, d), "manifest")
+    exp2 = _experiment(small_cfg, _dirichlet_task(), ckpt, rounds=4)
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        _, hist = exp2.run(params0, rounds=4)
+    assert len(hist.records) == 4       # full re-run from round 0
+
+
+def test_verify_checkpoint_detects_every_kind(small_cfg, tmp_path):
+    from repro.ckpt import (latest_intact_step, save_checkpoint,
+                            verify_checkpoint)
+    # big enough that the bitflip's mid-archive byte lands in array data,
+    # not zip framing/padding (where it would be a silent no-op)
+    tree = {"a": np.arange(4096, dtype=np.float32).reshape(64, 64),
+            "b": {"c": np.ones(2048, np.int32)}}
+    for step, kind in enumerate(CKPT_CORRUPT_KINDS):
+        d = str(tmp_path / kind)
+        path = save_checkpoint(d, 1, tree)
+        ok, why = verify_checkpoint(d, 1)
+        assert ok, why
+        FaultInjector.corrupt_checkpoint_dir(path, kind)
+        ok, why = verify_checkpoint(d, 1)
+        assert not ok and why
+        step_ok, skipped = latest_intact_step(d)
+        assert step_ok is None
+        assert skipped and skipped[0][0] == 1
+
+
+def test_injected_checkpoint_corruption_counted(small_cfg, tmp_path):
+    from repro.ckpt import verify_checkpoint
+    ckpt = str(tmp_path / "ckpt")
+    exp = _experiment(small_cfg, _dirichlet_task(), ckpt, rounds=4,
+                      faults=FaultPlan(seed=11, ckpt_corrupt_rate=1.0,
+                                       ckpt_corrupt_kind="bitflip"))
+    params0 = exp.init_params()
+    _, hist = exp.run(params0, rounds=4)
+    assert len(hist.records) == 4
+    assert exp.server._injector.stats["ckpt_corruptions"] > 0
+    for step in (2, 4):
+        ok, _ = verify_checkpoint(ckpt, step)
+        assert not ok
+
+
+# ---------------------------------------------------------------------------
+# plan-stage chaos: empty pools × all-straggler rounds × deep pipelines
+# ---------------------------------------------------------------------------
+
+def test_all_straggler_rounds_degrade_and_count(small_cfg, world):
+    model, params, task = world
+    chaos = ChaosTask(SyntheticFederatedData(task),
+                      all_straggler_rounds=(1, 2))
+    srv = FLServer(model, _fl(), chaos, pipeline_depth=4)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        _, hist = srv.run(params)
+    assert len(hist.records) == srv.fl.rounds
+    assert srv.select_stats["all_straggler_rounds"] == 2
+    assert any("drop_stragglers" in str(w.message) for w in caught)
+
+
+def test_chaos_task_outside_listed_rounds_is_transparent(world):
+    model, params, task = world
+    p_plain, h_plain = FLServer(model, _fl(), SyntheticFederatedData(task),
+                                pipeline_depth=2).run(params)
+    p_chaos, h_chaos = FLServer(model, _fl(),
+                                ChaosTask(SyntheticFederatedData(task)),
+                                pipeline_depth=2).run(params)
+    _records_equal(h_plain, h_chaos, bitwise=True)
+    _params_equal(p_plain, p_chaos)
+
+
+def test_empty_pool_mid_pipeline_fails_clean_checkpoint_survives(
+        small_cfg, tmp_path):
+    """Round 3's pool is empty under a depth-4 pipeline with a checkpoint
+    barrier at round 2: the run fails with the plan-stage ValueError (not
+    an opaque downstream crash), the barrier checkpoint is intact, and a
+    fresh run resumes from it."""
+    from repro.ckpt import verify_checkpoint
+    ckpt = str(tmp_path / "ckpt")
+    chaos = ChaosTask(_dirichlet_task(), empty_pool_rounds=(3,))
+    exp = _experiment(small_cfg, chaos, ckpt, rounds=6, pipeline_depth=4)
+    params0 = exp.init_params()
+    with pytest.raises(ValueError, match="empty pool"):
+        exp.run(params0, rounds=6)
+    ok, why = verify_checkpoint(ckpt, 2)
+    assert ok, why
+
+    exp2 = _experiment(small_cfg, _dirichlet_task(), ckpt, rounds=6,
+                       pipeline_depth=4)
+    _, hist = exp2.run(params0, rounds=6)
+    assert len(hist.records) == 6
+    assert [r.round for r in hist.records] == list(range(6))
+
+
+# ---------------------------------------------------------------------------
+# History.summary NaN containment
+# ---------------------------------------------------------------------------
+
+def _rec(t, loss, acc):
+    return RoundRecord(round=t, test_loss=loss, test_acc=acc,
+                       train_loss=loss, mask_matrix=np.ones((2, 2)),
+                       cohort=np.arange(2), union_frac=1.0,
+                       uploaded_params=10, wall_s=0.0)
+
+
+def test_summary_excludes_nonfinite_rounds():
+    h = History(records=[_rec(0, 1.0, 0.5), _rec(1, float("nan"), 0.9),
+                         _rec(2, 0.8, 0.6), _rec(3, float("inf"), 0.1)])
+    s = h.summary()
+    assert s["rounds"] == 4
+    assert s["nonfinite_rounds"] == 2
+    assert s["final_loss"] == 0.8           # last *clean* round
+    assert s["best_acc"] == 0.6             # NaN round's 0.9 excluded
+    assert s["uploaded_params_total"] == 40  # uploads happened regardless
+
+
+def test_summary_all_poisoned():
+    h = History(records=[_rec(0, float("nan"), float("nan"))])
+    s = h.summary()
+    assert s["nonfinite_rounds"] == 1
+    assert s["final_loss"] is None and s["best_acc"] is None
+    h_empty = History()
+    assert h_empty.summary()["nonfinite_rounds"] == 0
+
+
+# ---------------------------------------------------------------------------
+# no per-fault recompiles: ONE guarded program
+# ---------------------------------------------------------------------------
+
+def test_guarded_program_compiles_once(world):
+    model, params, task = world
+    client_mod.clear_jit_cache()
+    srv = FLServer(model, _fl(rounds=3), SyntheticFederatedData(task),
+                   faults=FaultPlan(seed=7, death_rate=0.5,
+                                    corrupt_rate=0.5))
+    srv.run(params)
+    programs = client_mod.jit_cache_stats()["programs"]
+    assert programs["cohort_update_guarded"] == 1
+    # and varying every fault knob still replays the same trace
+    plan = srv.plan_round(98)
+    sampled = srv.sample_round(plan)
+    masks = srv.select_round(plan, srv.probe_round(params, sampled))
+    n = len(plan.cohort)
+    for pattern in (np.zeros(n), np.ones(n), np.arange(n) % 2):
+        srv.client.cohort_update_guarded(
+            params, sampled.update_batches, masks, plan.sizes, srv.fl.lr,
+            pattern.astype(np.float32),
+            (pattern * CORRUPT_CODES["explode"]).astype(np.int32),
+            123.0, 456.0)
+    assert client_mod.jit_cache_stats()["programs"][
+        "cohort_update_guarded"] == 1
+
+
+def test_fault_round_strict_mode(strict_mode, world):
+    """The warmed fault path runs under the transfer guard + retrace
+    sentinel: its host syncs are the sanctioned round-boundary ones and
+    fault patterns never retrace."""
+    model, params, task = world
+    plan = FaultPlan(seed=13, death_rate=0.4, corrupt_rate=0.4,
+                     stall_rate=0.3)
+    client_mod.clear_jit_cache()
+    warm = FLServer(model, _fl(), SyntheticFederatedData(task),
+                    faults=plan)
+    _, h_warm = warm.run(params)
+    srv = FLServer(model, _fl(), SyntheticFederatedData(task), faults=plan)
+    with strict_mode("fault round loop", force=True):
+        _, h_strict = srv.run(params)
+    assert h_warm.summary() == h_strict.summary()
+
+
+# ---------------------------------------------------------------------------
+# serve-side degradation: admit drops, slot failures, upload retries
+# ---------------------------------------------------------------------------
+
+def _serve_world(n_layers=3, d_model=64):
+    cfg = reduced(get_arch("tinyllama_1_1b"), n_layers=n_layers,
+                  d_model=d_model)
+    model = Model(cfg, RuntimeConfig(remat=False, seq_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _two_layer_record(model, params):
+    from repro.serve import delta_from_params
+    tuned = dict(params)
+    tuned["blocks"] = {k: np.asarray(v, np.float32) + 0.01
+                       for k, v in params["blocks"].items()}
+    return delta_from_params(params, tuned, model.cfg, layers=[0, 1])
+
+
+@pytest.mark.parametrize("admit_retries,n_done,n_dropped",
+                         [(2, 1, 2),      # bounded retry: heads dropped
+                          (30, 3, 0)])    # patient: all served serially
+def test_slot_server_capacity_exhaustion_bounded(admit_retries, n_done,
+                                                 n_dropped):
+    """One user whose delta fills the whole capacity-1 overlay, three
+    requests for it: the second admit can never succeed while the first
+    decodes.  The old loop requeued unconditionally — an idle server with
+    an unadmittable head raised RuntimeError / livelocked.  Now the head
+    is retried ``admit_retries`` times then dropped (small budget) or
+    admitted after the running request releases (large budget)."""
+    from repro.launch.serve import Request, SlotServer
+    from repro.serve import DeltaStore
+    model, params = _serve_world()
+    store = DeltaStore(model.cfg)
+    store.put(0, _two_layer_record(model, params))
+    reqs = [Request(i, [1, 2, 3], 4, user_id=0) for i in range(3)]
+    srv = SlotServer(model, params, slots=2, max_seq=16, mode="delta",
+                     store=store, capacity=1, admit_retries=admit_retries)
+    done, stats = srv.run(reqs)
+    assert len(done) == n_done
+    assert stats["dropped_requests"] == n_dropped == len(srv.dropped)
+    for r in done:
+        assert len(r.generated) == r.max_new     # survivors fully served
+
+
+def test_slot_faults_requeue_then_drop():
+    from repro.launch.serve import Request, SlotServer
+    model, params = _serve_world()
+    inj = FaultInjector(FaultPlan(seed=21, slot_fault_rate=1.0))
+    srv = SlotServer(model, params, slots=2, max_seq=16, mode="shared",
+                     injector=inj, max_slot_retries=1)
+    done, stats = srv.run([Request(i, [1, 2, 3], 4) for i in range(3)])
+    # every step strikes every slot: nothing ever finishes, everything is
+    # retried max_slot_retries times then dropped — and the loop terminates
+    assert not done
+    assert stats["dropped_requests"] == 3
+    assert stats["slot_failures"] == 3 * (1 + 1)  # initial + one retry each
+    assert inj.stats["slot_faults"] > 0
+
+
+def test_slot_faults_recoverable_at_low_rate():
+    from repro.launch.serve import Request, SlotServer
+    model, params = _serve_world()
+    inj = FaultInjector(FaultPlan(seed=3, slot_fault_rate=0.1))
+    srv = SlotServer(model, params, slots=2, max_seq=32, mode="shared",
+                     injector=inj, max_slot_retries=50)
+    done, stats = srv.run([Request(i, [1, 2, 3], 4) for i in range(4)])
+    assert len(done) == 4                    # retries absorb the strikes
+    assert stats["dropped_requests"] == 0
+    for r in done:
+        assert len(r.generated) == r.max_new
+
+
+def test_overlay_upload_retries_and_rollback():
+    from repro.serve import DeltaOverlay
+    model, params = _serve_world()
+    rec = _two_layer_record(model, params)
+
+    # permanent failure: all-or-nothing rollback, no half-admitted user
+    inj = FaultInjector(FaultPlan(seed=0, upload_fail_rate=1.0))
+    ov = DeltaOverlay(model, capacity=2, injector=inj,
+                      max_upload_retries=2)
+    assert not ov.try_admit(0, rec)
+    assert ov.stats["failed_admits"] == 1
+    assert ov.n_entries == 0
+    assert ov.entries[0] == []
+    assert inj.stats["upload_faults"] == 3       # attempts 0..max_retries
+    assert ov.stats["upload_retries"] == 2
+
+    # transient failure: bounded retries absorb it
+    inj2 = FaultInjector(FaultPlan(seed=2, upload_fail_rate=0.4))
+    ov2 = DeltaOverlay(model, capacity=2, injector=inj2,
+                       max_upload_retries=10)
+    assert ov2.try_admit(0, rec)
+    assert ov2.n_entries == rec.n_layers == 2
+    assert inj2.stats["upload_faults"] == ov2.stats["upload_retries"]

@@ -21,6 +21,17 @@ from repro.data.synthetic import FederatedTaskConfig, SyntheticFederatedData
 from repro.models.model import Model
 
 
+def _stats(**kw):
+    """Expected select_stats: the full zeroed counter set with overrides
+    (new fault/degradation counters default to 0 in fault-free tests)."""
+    base = {"solves": 0, "memo_hits": 0, "partial_warm_starts": 0,
+            "all_straggler_rounds": 0, "quarantined_rows": 0,
+            "dead_clients": 0, "solver_timeouts": 0, "dispatch_retries": 0,
+            "ckpt_fallbacks": 0}
+    base.update(kw)
+    return base
+
+
 @pytest.fixture(scope="module")
 def world():
     cfg = reduced(get_arch("xlm_roberta_base"), n_layers=4, d_model=32)
@@ -129,20 +140,17 @@ def test_select_round_memo_and_warm_cache(world):
              np.abs(rng.randn(len(plan.probe_ids), server.L))
              .astype(np.float32)}
     m1 = server.select_round(plan, stats)
-    assert server.select_stats == {"solves": 1, "memo_hits": 0, "partial_warm_starts": 0,
-                                   "all_straggler_rounds": 0}
+    assert server.select_stats == _stats(solves=1)
     assert set(server._warm_masks) == {1, 4, 7}
     # identical inputs, but the warm init changed (cold → m1): replaying
     # would be unsound for a solver that may not have converged, so this
     # re-solves; the converged m1 is a fixed point, so masks are unchanged
     m2 = server.select_round(plan, stats)
-    assert server.select_stats == {"solves": 2, "memo_hits": 0, "partial_warm_starts": 0,
-                                   "all_straggler_rounds": 0}
+    assert server.select_stats == _stats(solves=2)
     np.testing.assert_array_equal(m1, m2)
     # now (inputs, init) are both byte-identical: the memo hits
     m3 = server.select_round(plan, stats)
-    assert server.select_stats == {"solves": 2, "memo_hits": 1, "partial_warm_starts": 0,
-                                   "all_straggler_rounds": 0}
+    assert server.select_stats == _stats(solves=2, memo_hits=1)
     np.testing.assert_array_equal(m1, m3)
     # changed utilities invalidate the memo
     stats2 = {"grad_sq_norms": stats["grad_sq_norms"] + 1.0}
@@ -175,8 +183,7 @@ def test_round_dependent_host_strategy_is_never_memoized(world):
              np.ones((3, server.L), np.float32)}
     m0 = server.select_round(server._plan_for(cohort, t=0), stats)
     m1 = server.select_round(server._plan_for(cohort, t=1), stats)
-    assert server.select_stats == {"solves": 2, "memo_hits": 0, "partial_warm_starts": 0,
-                                   "all_straggler_rounds": 0}
+    assert server.select_stats == _stats(solves=2)
     assert not np.array_equal(m0, m1)     # the schedule actually advanced
 
 
